@@ -1,0 +1,297 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call is wall time of
+the measured JAX call where applicable, else 0; ``derived`` carries the
+figure's headline quantity).
+
+  fig4_exec_time        t_fix staircase vs FFT length (measured, CPU)
+  fig6_time_vs_freq     t_f/t_d regimes a/b/c (DVFS model, V100+Nano)
+  fig7_energy_u_shape   E(f) per batch, N=16k (model)
+  fig8_power_vs_freq    average power vs clock (model)
+  fig9_optimal_freq     optimal f as % of boost (model)
+  table3_mean_optimal   mean optimal clock per device x precision
+  fig10_gflops_per_watt efficiency at the optimal clock
+  fig11_exec_increase   slowdown at the optimal clock
+  fig13_16_ief          efficiency increase vs boost & base clocks
+  table4_pipeline       pulsar pipeline w/ per-stage clock locking
+  kernels               Pallas kernels (interpret) vs jnp oracle wall time
+  roofline              the dry-run roofline table (artifacts)
+  dvfs_cells            the paper's technique applied to every dry-run cell
+"""
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def _timeit(fn, *args, n=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6        # us
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+# ---------------------------------------------------------------------------
+
+def fig4_exec_time():
+    """t_fix staircase: fixed data volume, varying FFT length (measured)."""
+    from repro.fft.plan import plan_for_length
+    m_bytes = 2**22                                     # 4 MiB on CPU
+    for logn in (5, 8, 11, 13, 14, 16):
+        n = 2**logn
+        batch = max(m_bytes // (n * 8), 1)
+        x = (jax.random.normal(jax.random.PRNGKey(0), (batch, n))
+             + 1j * jax.random.normal(jax.random.PRNGKey(1), (batch, n))
+             ).astype(jnp.complex64)
+        plan = plan_for_length(n)
+        us = _timeit(jax.jit(plan.fn), x)
+        _row(f"fig4_tfix_n{n}", us,
+             f"passes={plan.passes};alg={plan.algorithm}")
+
+
+def fig6_time_vs_freq():
+    from repro.core import JETSON_NANO, TESLA_V100, FFTCase, fft_workload
+    for dev in (TESLA_V100, JETSON_NANO):
+        for n in (2**10, 2**13, 2**14):
+            prof = fft_workload(FFTCase(n=n), dev)
+            f = dev.frequencies()
+            t = prof.time(f, dev)
+            _row(f"fig6_{dev.name}_n{n}", 0.0,
+                 f"regime={prof.regime(dev)};max_slowdown="
+                 f"{t.max()/t[0]:.2f}")
+
+
+def fig7_energy_u_shape():
+    from repro.core import JETSON_NANO, TESLA_V100, FFTCase, fft_workload, \
+        sweep
+    for dev in (TESLA_V100, JETSON_NANO):
+        res = sweep(fft_workload(FFTCase(n=2**14), dev), dev)
+        _row(f"fig7_{dev.name}_n16384", 0.0,
+             f"opt_mhz={res.optimal.f:.0f};E_opt/E_boost="
+             f"{res.optimal.energy/res.boost.energy:.3f}")
+
+
+def fig8_power_vs_freq():
+    from repro.core import (JETSON_NANO, TESLA_V100, FFTCase, PowerModel,
+                            evaluate, fft_workload)
+    for dev in (TESLA_V100, JETSON_NANO):
+        prof = fft_workload(FFTCase(n=2**14), dev)
+        pm = PowerModel(dev)
+        pts = evaluate(prof, dev, pm, dev.frequencies())
+        _row(f"fig8_{dev.name}", 0.0,
+             f"P_boost={pts[0].power:.1f}W;"
+             f"P_min={min(p.power for p in pts):.1f}W")
+
+
+def fig9_optimal_freq():
+    from repro.core.calibration import calibrate
+    from repro.core.hardware import JETSON_NANO, TESLA_V100
+    for dev in (TESLA_V100, JETSON_NANO):
+        s = calibrate(dev, "fp32")
+        fracs = [x.optimal_frequency_frac for x in s.sweeps]
+        _row(f"fig9_{dev.name}_fp32", 0.0,
+             f"opt_frac_min={min(fracs):.2f};max={max(fracs):.2f}")
+
+
+def table3_mean_optimal():
+    from repro.core.calibration import calibrate, supported_precisions
+    from repro.core.hardware import JETSON_NANO, TESLA_V100
+    for dev in (TESLA_V100, JETSON_NANO):
+        for prec in supported_precisions(dev):
+            s = calibrate(dev, prec)
+            _row(f"table3_{dev.name}_{prec}", 0.0,
+                 f"mean_opt_mhz={s.mean_opt.f_mean:.1f}")
+
+
+def fig10_gflops_per_watt():
+    from repro.core.calibration import calibrate
+    from repro.core.hardware import JETSON_NANO, TESLA_V100
+    for dev in (TESLA_V100, JETSON_NANO):
+        s = calibrate(dev, "fp32")
+        effs = [x.optimal.gflops_per_watt for x in s.sweeps]
+        _row(f"fig10_{dev.name}_fp32", 0.0,
+             f"gflops_per_w_median={np.median(effs):.1f}")
+
+
+def fig11_exec_increase():
+    from repro.core.calibration import calibrate
+    from repro.core.hardware import JETSON_NANO, TESLA_V100
+    for dev in (TESLA_V100, JETSON_NANO):
+        s = calibrate(dev, "fp32")
+        _row(f"fig11_{dev.name}_fp32", 0.0,
+             f"median_slowdown_pct={100*s.median_slowdown:.2f}")
+
+
+def fig13_16_ief():
+    from repro.core.calibration import calibrate
+    from repro.core.hardware import JETSON_NANO, TESLA_V100
+    for dev in (TESLA_V100, JETSON_NANO):
+        s = calibrate(dev, "fp32")
+        base = s.mean_i_ef_base
+        _row(f"fig13_{dev.name}_ief_boost", 0.0,
+             f"I_ef={s.mean_i_ef_boost:.3f}")
+        if base is not None:
+            _row(f"fig14_{dev.name}_ief_base", 0.0, f"I_ef={base:.3f}")
+        _row(f"fig15_{dev.name}_ief_meanopt_boost", 0.0,
+             f"I_ef={s.mean_opt.i_ef_mean:.3f};loss_pp="
+             f"{s.mean_opt.loss_pp:.1f}")
+
+
+def table4_pipeline():
+    """Pulsar pipeline with the FFT stage clock-locked (Sec. 5.3)."""
+    from repro.core.hardware import TESLA_V100
+    from repro.core.scheduler import DVFSScheduler, predicted_pipeline_i_ef
+    from repro.core.dvfs import sweep
+    from repro.fft.pipeline import (PipelineShape, fft_time_share,
+                                    stage_profiles)
+    dev = TESLA_V100
+    sched = DVFSScheduler(dev)
+    for harmonics in (2, 4, 8, 16, 32):
+        shape = PipelineShape(batch=32, n=2**20, n_harmonics=harmonics)
+        profs = stage_profiles(shape, dev)
+        share = fft_time_share(shape, dev)
+        fft_res = sweep(profs[0], dev)
+        stages = sched.plan(profs,
+                            locked={profs[0].name: fft_res.optimal.f})
+        rep = sched.evaluate_pipeline(stages)
+        pred = predicted_pipeline_i_ef(share, fft_res.i_ef_boost)
+        _row(f"table4_h{harmonics}", 0.0,
+             f"fft_share={100*share:.1f}%;I_ef={rep.i_ef:.3f};"
+             f"share_arith_pred={pred:.3f};slowdown={100*rep.slowdown:.2f}%")
+
+
+def kernels():
+    from repro.kernels.fft.ops import fft_kernel_c2c
+    from repro.kernels.harmonic_sum.ops import harmonic_sum_kernel
+    from repro.kernels.spectrum.ops import power_spectrum_stats_kernel
+    x = (jax.random.normal(jax.random.PRNGKey(0), (16, 2048))
+         + 1j * jax.random.normal(jax.random.PRNGKey(1), (16, 2048))
+         ).astype(jnp.complex64)
+    us = _timeit(lambda v: fft_kernel_c2c(v, interpret=True), x, n=3)
+    ref = _timeit(jax.jit(jnp.fft.fft), x, n=3)
+    _row("kernel_fft_2048x16_interp", us, f"jnp_ref_us={ref:.1f}")
+    p = jnp.abs(x) ** 2
+    us = _timeit(lambda v: harmonic_sum_kernel(v, 32, interpret=True), p,
+                 n=3)
+    _row("kernel_harmonic_sum_32", us, "levels=6")
+    us = _timeit(lambda v: power_spectrum_stats_kernel(v, interpret=True),
+                 x, n=3)
+    _row("kernel_spectrum_stats", us, "fused=power+mean+var")
+
+
+def roofline():
+    """The dry-run roofline table (reads artifacts/dryrun/*.json)."""
+    from repro.analysis.roofline import roofline_from_artifact
+    paths = sorted(glob.glob(os.path.join(ART, "*.json")))
+    if not paths:
+        _row("roofline", 0.0, "no-artifacts-run-dryrun-first")
+        return
+    from repro.configs import ARCHS
+    for p in paths:
+        if os.path.basename(p).split("__")[0] not in ARCHS:
+            continue                      # fft-pencil handled separately
+        t = roofline_from_artifact(p)
+        r = t.row()
+        _row(f"roofline_{t.arch}_{t.shape}_{t.mesh}", 0.0,
+             f"bound={r['bound']};compute_ms={r['compute_ms']};"
+             f"memory_ms={r['memory_ms']};coll_ms={r['collective_ms']};"
+             f"useful={r['useful_ratio']};mfu={r['mfu_roofline']}")
+
+
+def dvfs_cells():
+    """The paper's technique applied to every lowered cell: optimal clock,
+    predicted energy saving and slowdown — the headline integration."""
+    from repro.analysis.roofline import roofline_from_artifact
+    from repro.core.dvfs import sweep
+    from repro.core.hardware import TPU_V5E
+    from repro.core.workloads import roofline_workload
+    paths = sorted(glob.glob(os.path.join(ART, "*__16x16.json")))
+    from repro.configs import ARCHS
+    for p in paths:
+        if os.path.basename(p).split("__")[0] not in ARCHS:
+            continue
+        t = roofline_from_artifact(p)
+        prof = roofline_workload(
+            f"{t.arch}-{t.shape}", TPU_V5E, hlo_flops=t.hlo_flops,
+            hbm_bytes=t.hbm_bytes, collective_bytes=t.collective_bytes,
+            useful_flops=t.model_flops / t.chips, issue_efficiency=0.75)
+        res = sweep(prof, TPU_V5E, time_budget=0.10)    # real-time margin
+        _row(f"dvfs_{t.arch}_{t.shape}", 0.0,
+             f"opt_mhz={res.optimal.f:.0f};power_cut="
+             f"{100*res.power_reduction:.0f}%;slowdown="
+             f"{100*res.slowdown:.1f}%;I_ef={res.i_ef_boost:.2f}")
+
+
+def conclusions_cost_co2():
+    """Paper Conclusions: recurrent cost + CO2 saving over years of
+    operation.  Scenario: one 256-chip v5e pod serving decode traffic
+    24/7 at the DVFS plan vs boost clocks (0.25 $/kWh, 0.4 kgCO2/kWh)."""
+    from repro.analysis.roofline import roofline_from_artifact
+    from repro.core.dvfs import sweep
+    from repro.core.hardware import TPU_V5E
+    from repro.core.realtime import CostModel
+    from repro.core.workloads import roofline_workload
+    path = os.path.join(ART, "codeqwen1.5-7b__decode_32k__16x16.json")
+    if not os.path.exists(path):
+        _row("cost_co2", 0.0, "no-artifacts")
+        return
+    t = roofline_from_artifact(path)
+    prof = roofline_workload("decode", TPU_V5E, hlo_flops=t.hlo_flops,
+                             hbm_bytes=t.hbm_bytes,
+                             collective_bytes=t.collective_bytes,
+                             issue_efficiency=0.75)
+    res = sweep(prof, TPU_V5E, time_budget=0.10)
+    cm = CostModel(device_cost=0.0, energy_cost=0.25, years=5.0)
+    chips = 256
+    kwh_saved = ((res.boost.power - res.optimal.power) / 1000.0
+                 * 24 * 365 * 5 * chips)
+    _row("conclusions_cost_co2", 0.0,
+         f"pod_power_boost={res.boost.power*chips/1000:.1f}kW;"
+         f"pod_power_opt={res.optimal.power*chips/1000:.1f}kW;"
+         f"5yr_saving_usd={kwh_saved*0.25:,.0f};"
+         f"5yr_co2_tonnes={kwh_saved*0.4/1000:,.0f}")
+
+
+def fft_pencil_roofline():
+    """The paper's own workload on the production mesh (fft_dryrun)."""
+    for mesh in ("16x16", "2x16x16"):
+        p = os.path.join(ART, f"fft-pencil__c2c_4096x8192_b64__{mesh}.json")
+        if not os.path.exists(p):
+            continue
+        a = json.load(open(p))
+        _row(f"fft_pencil_{mesh}", 0.0,
+             f"coll_dev={a['collective_bytes_per_device']:.3e};"
+             f"flops_dev={a['flops_per_device']:.3e};"
+             f"fits={a['memory']['fits_16gb']}")
+
+
+BENCHES = [fig4_exec_time, fig6_time_vs_freq, fig7_energy_u_shape,
+           fig8_power_vs_freq, fig9_optimal_freq, table3_mean_optimal,
+           fig10_gflops_per_watt, fig11_exec_increase, fig13_16_ief,
+           table4_pipeline, kernels, roofline, dvfs_cells,
+           fft_pencil_roofline, conclusions_cost_co2]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for b in BENCHES:
+        b()
+
+
+if __name__ == "__main__":
+    main()

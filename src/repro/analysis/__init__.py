@@ -1,0 +1,5 @@
+from repro.analysis.hlo import collective_bytes_from_hlo
+from repro.analysis.roofline import RooflineTerms, roofline_from_artifact
+
+__all__ = ["collective_bytes_from_hlo", "RooflineTerms",
+           "roofline_from_artifact"]

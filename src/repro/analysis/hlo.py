@@ -1,0 +1,231 @@
+"""Mini HLO cost model with while-loop trip-count awareness.
+
+``compiled.cost_analysis()`` on the CPU backend counts a ``while`` body
+ONCE, so a 40-layer ``lax.scan`` under-reports FLOPs/bytes/collectives by
+40x.  This module re-derives the three roofline inputs directly from the
+compiled (SPMD-partitioned, per-device) HLO text:
+
+  * FLOPs        — from ``dot`` ops: 2 * prod(output) * prod(contracted)
+  * HBM bytes    — per-op traffic (operands + outputs) of fusions, dots,
+                   copies, slices, reduces and collectives; tuple plumbing
+                   (bitcast/get-tuple-element/tuple) is free, matching TPU
+                   semantics where only fusion boundaries touch HBM
+  * collectives  — output bytes of all-gather / all-reduce /
+                   reduce-scatter / all-to-all / collective-permute
+
+Each total is accumulated per computation; ``while`` call sites multiply
+the body's totals by ``backend_config.known_trip_count`` (1 if unknown).
+Fusion-called computations are NOT recursed (a fusion is one kernel).
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_COMP_START_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# Ops that MATERIALISE on TPU (fusion boundaries): these are where HBM
+# traffic actually happens.  Elementwise/reduce/broadcast/slice chains fuse
+# into their neighbouring dots on TPU, so counting them (as the raw CPU
+# HLO would suggest) overstates traffic ~50x; their tensors are already
+# accounted as the producing/consuming dot's output/operand.
+_TRAFFIC_OPS = {
+    "dot", "convolution", "copy", "dynamic-update-slice", "gather",
+    "scatter", "sort", "rng-bit-generator", "fusion",
+} | set(COLLECTIVE_KINDS)
+
+_FREE_OPS = {"bitcast", "get-tuple-element", "tuple", "parameter",
+             "constant", "after-all", "partition-id", "replica-id"}
+
+
+def _dims(dim_str: str) -> list[int]:
+    return [int(d) for d in dim_str.split(",") if d] if dim_str else []
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in _dims(dims):
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _first_shape(type_str: str) -> tuple[str, list[int]] | None:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    return m.group(1), _dims(m.group(2))
+
+
+class _Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.coll = defaultdict(float)
+        # (callee, multiplier) pairs from while ops
+        self.calls: list[tuple[str, float]] = []
+
+
+def analyze_hlo(hlo_text: str) -> dict:
+    comps: dict[str, _Computation] = {}
+    entry: str | None = None
+    cur: _Computation | None = None
+    symbols: dict[str, str] = {}
+
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        mstart = _COMP_START_RE.match(line)
+        if mstart and line.endswith("{"):
+            name = mstart.group(2)
+            cur = _Computation(name)
+            comps[name] = cur
+            symbols = {}
+            if mstart.group(1):
+                entry = name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}" or line.strip().startswith("} "):
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op = m.group(1), m.group(2), m.group(3)
+        symbols[name] = type_str
+
+        base_op = re.sub(r"-(start|done)$", "", op)
+        if op.endswith("-done"):
+            continue                      # counted at -start
+
+        # operand names: within the first top-level paren group
+        paren = line[line.index(op + "(") + len(op) + 1:]
+        depth = 1
+        arglist = []
+        for ch in paren:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            arglist.append(ch)
+        argstr = "".join(arglist)
+        operands = re.findall(r"%([\w\.\-]+)", argstr)
+
+        if base_op == "while":
+            trip = 1.0
+            mt = _TRIP_RE.search(line)
+            if mt:
+                trip = float(mt.group(1))
+            mb = re.search(r"body=%?([\w\.\-]+)", line)
+            if mb:
+                cur.calls.append((mb.group(1), trip))
+            continue
+        if base_op == "conditional":
+            for mc in re.findall(r"(?:branch_computations=\{([^}]*)\}|"
+                                 r"(?:true|false)_computation=%?([\w\.\-]+))",
+                                 line):
+                for grp in mc:
+                    for nm in re.findall(r"%?([\w\.\-]+)", grp or ""):
+                        if nm in ("",):
+                            continue
+                        cur.calls.append((nm, 1.0))
+            continue
+        if base_op == "call":
+            mc = re.search(r"to_apply=%?([\w\.\-]+)", line)
+            if mc:
+                cur.calls.append((mc.group(1), 1.0))
+            continue
+
+        if base_op in _FREE_OPS:
+            continue
+
+        out_bytes = _shape_bytes(type_str)
+        opnd_bytes = sum(_shape_bytes(symbols.get(o, "")) for o in operands)
+
+        if base_op == "dot":
+            fs = _first_shape(type_str)
+            mcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+            if fs and mcd and operands:
+                lhs_type = symbols.get(operands[0], "")
+                lhs = _first_shape(lhs_type)
+                if lhs:
+                    contracted = 1
+                    for d in _dims(mcd.group(1)):
+                        if d < len(lhs[1]):
+                            contracted *= lhs[1][d]
+                    out_elems = 1
+                    for d in fs[1]:
+                        out_elems *= d
+                    cur.flops += 2.0 * out_elems * contracted
+            cur.bytes += out_bytes + opnd_bytes
+            continue
+
+        if base_op in COLLECTIVE_KINDS:
+            cur.coll[base_op] += out_bytes
+            cur.bytes += out_bytes + opnd_bytes
+            continue
+
+        if base_op in _TRAFFIC_OPS:
+            cur.bytes += out_bytes + opnd_bytes
+
+    # resolve call graph (memoised)
+    memo: dict[str, tuple[float, float, dict]] = {}
+
+    def total(name: str, seen=()) -> tuple[float, float, dict]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in seen:
+            return 0.0, 0.0, {}
+        c = comps[name]
+        fl, by = c.flops, c.bytes
+        co = dict(c.coll)
+        for callee, mult in c.calls:
+            cf, cb, cc = total(callee, seen + (name,))
+            fl += mult * cf
+            by += mult * cb
+            for k, v in cc.items():
+                co[k] = co.get(k, 0.0) + mult * v
+        memo[name] = (fl, by, co)
+        return memo[name]
+
+    if entry is None:
+        entry = next(iter(comps), None)
+    fl, by, co = total(entry) if entry else (0.0, 0.0, {})
+    co_total = float(sum(co.values()))
+    return {
+        "flops": fl,
+        "bytes": by,
+        "collectives": co,
+        "collective_bytes": co_total,
+    }
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict[str, float]:
+    """Back-compat wrapper: {kind: bytes, 'total': bytes} with trip counts."""
+    a = analyze_hlo(hlo_text)
+    out = dict(a["collectives"])
+    out["total"] = a["collective_bytes"]
+    return out

@@ -1,0 +1,196 @@
+"""Roofline analysis per (arch x shape x mesh) from dry-run artifacts.
+
+  compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory term     = HLO_bytes / (chips * HBM_bw)
+  collective term = collective_bytes / (chips * link_bw)
+
+Constants: TPU v5e — 197 TFLOP/s bf16/chip, 819 GB/s HBM, ~50 GB/s/link.
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE); the useful-compute
+ratio MODEL_FLOPS / HLO_FLOPs flags remat/dispatch waste.
+
+The DVFS planner (the paper's technique) consumes these terms directly:
+``repro.core.workloads.roofline_workload`` turns a row of this table into
+a WorkloadProfile whose optimal clock and energy saving are computed just
+like the paper's per-FFT-length optimum.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.core.hardware import TPU_V5E, DeviceSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float                # per-device FLOPs of one step
+    hbm_bytes: float                # per-device HBM traffic
+    collective_bytes: float         # per-device collective traffic
+    model_flops: float              # 6*N(active)*D tokens, global
+    device: DeviceSpec = TPU_V5E
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / self.device.peak_flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / self.device.hbm_bandwidth
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / self.device.link_bandwidth
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Roofline step time (perfect overlap = max of terms)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / (global HLO flops) — remat/dispatch waste."""
+        total_hlo = self.hlo_flops * self.chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achieved fraction of the dominant roofline: how close the
+        OTHER terms come to the bound (1.0 = perfectly balanced use of
+        the bottleneck resource)."""
+        if self.step_s == 0:
+            return 0.0
+        return (self.model_flops / self.chips / self.device.peak_flops
+                ) / self.step_s
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "compute_ms": round(self.compute_s * 1e3, 3),
+            "memory_ms": round(self.memory_s * 1e3, 3),
+            "collective_ms": round(self.collective_s * 1e3, 3),
+            "bound": self.bound,
+            "useful_ratio": round(self.useful_ratio, 3),
+            "mfu_roofline": round(self.roofline_fraction, 3),
+        }
+
+
+def model_flops_for(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """6*N*D (6*N_active*D for MoE); D = tokens processed by the step."""
+    n = cfg.active_param_count() if cfg.moe is not None else cfg.param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens               # forward only
+    tokens = shape.global_batch                # one token per sequence
+    return 2.0 * n * tokens
+
+
+def analytic_memory_bytes(cfg: ArchConfig, shape: ShapeSpec, chips: int
+                          ) -> dict[str, float]:
+    """First-principles HBM traffic per device per step (bytes).
+
+    The HLO-parsed byte count (recorded in the artifact) is a gross UPPER
+    bound: the CPU backend fuses at much finer granularity than TPU and
+    the parser cannot see in-place aliasing of donated cache/state
+    buffers.  This breakdown is the standard napkin-roofline accounting
+    instead; every component is listed so §Perf iterations can attack the
+    dominant one.
+    """
+    n_params = cfg.param_count()
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind in ("train", "prefill")
+                                   else 1)
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
+    out: dict[str, float] = {}
+
+    if shape.kind == "train":
+        out["weights_io"] = 3 * n_params * 2          # read fwd+bwd, write
+        out["optimizer_io"] = 24 * n_params           # grads + m/v, f32
+        out["activations_io"] = 3 * L * tokens * d * 2
+        out["logits_io"] = 4 * tokens * V * 4         # chunked CE fwd+bwd
+    elif shape.kind == "prefill":
+        out["weights_io"] = n_params * 2
+        out["activations_io"] = 2 * L * tokens * d * 2
+        out["logits_io"] = shape.global_batch * V * 4
+    else:
+        out["weights_io"] = n_params * 2
+        out["activations_io"] = 2 * L * shape.global_batch * d * 2
+
+    # attention-score traffic (jnp chunked flash materialises score chunks;
+    # the Pallas-flash §Perf optimisation removes this term)
+    s = shape.seq_len
+    if cfg.family in ("ssm",):
+        q = cfg.ssm.chunk
+        h = cfg.ssm.expand * d // cfg.ssm.head_dim
+        if shape.kind in ("train", "prefill"):
+            # L matrices (B, S/Q, H, Q, Q) f32 -> B*S*H*Q elements/pass
+            passes = 4 if shape.kind == "train" else 2
+            out["ssd_chunk_io"] = passes * L * shape.global_batch * s * q * h * 4
+    else:
+        n_attn = L
+        if cfg.family == "hybrid":
+            n_attn = cfg.n_layers // max(cfg.shared_attn_every, 1)
+        kv_len = s
+        if cfg.sliding_window and cfg.local_per_global:
+            # 5 of 6 layers see only the window
+            frac_local = cfg.local_per_global / (cfg.local_per_global + 1)
+            kv_len = (frac_local * cfg.sliding_window
+                      + (1 - frac_local) * s)
+        heads = cfg.n_heads
+        if shape.kind == "train":
+            out["attn_scores_io"] = (4 * n_attn * shape.global_batch
+                                     * heads * s * kv_len / 2 * 4)
+        elif shape.kind == "prefill":
+            out["attn_scores_io"] = (2 * n_attn * shape.global_batch
+                                     * heads * s * kv_len / 2 * 4)
+        else:
+            # decode: read the KV cache once per step
+            if cfg.mla is not None:
+                per_tok = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+                out["kv_cache_io"] = L * shape.global_batch * s * per_tok * 2
+            else:
+                hd = cfg.resolved_head_dim
+                out["kv_cache_io"] = (n_attn * shape.global_batch * s
+                                      * 2 * cfg.n_kv_heads * hd * 2)
+    if cfg.family == "hybrid" and shape.kind == "decode":
+        hd = cfg.resolved_head_dim
+        n_sites = cfg.n_layers // max(cfg.shared_attn_every, 1)
+        out["kv_cache_io"] = (n_sites * shape.global_batch * s
+                              * 2 * cfg.n_kv_heads * hd * 2)
+
+    if cfg.moe is not None and shape.kind in ("train", "prefill"):
+        passes = 4 if shape.kind == "train" else 2
+        out["moe_dispatch_io"] = (passes * (L - cfg.n_dense_layers) * tokens
+                                  * cfg.moe.top_k * 1.25 * d * 2)
+
+    out["total"] = float(sum(out.values()))
+    return {k: v / chips for k, v in out.items()}
+
+
+def roofline_from_artifact(path: str) -> RooflineTerms:
+    from repro.configs import get_arch, get_shape
+    with open(path) as f:
+        a = json.load(f)
+    cfg = get_arch(a["arch"])
+    shape = get_shape(a["shape"])
+    mem = analytic_memory_bytes(cfg, shape, a["chips"])
+    return RooflineTerms(
+        arch=a["arch"], shape=a["shape"], mesh=a["mesh"],
+        chips=a["chips"], hlo_flops=a["flops_per_device"],
+        hbm_bytes=mem["total"],
+        collective_bytes=a["collective_bytes_per_device"],
+        model_flops=a["model_flops"],
+    )

@@ -1,0 +1,26 @@
+"""The paper's contribution as a composable library.
+
+Layers:
+  hardware     device specs + DVFS frequency/voltage tables (paper Tables 1-2)
+  power_model  P(f) = static(V) + dynamic(f, V) + memory
+  perf_model   t(f) with the paper's three regimes (Fig. 6)
+  energy       Eqs. (3)-(7): energy, GFLOPS/W, I_ef
+  workloads    FFT plan model + compiled-step roofline profiles
+  dvfs         optimal & mean-optimal frequency search (Table 3)
+  scheduler    per-stage clock locking for pipelines (Sec. 5.3, Table 4)
+  realtime     real-time speed-up S and hardware sizing (Sec. 2.3)
+  calibration  paper-faithful V100/Jetson reproduction
+"""
+from repro.core.dvfs import MeanOptimal, SweepResult, mean_optimal, sweep
+from repro.core.energy import (OperatingPoint, efficiency_increase, evaluate,
+                               fft_flops, ffts_per_batch)
+from repro.core.hardware import (DEVICES, JETSON_NANO, TESLA_V100, TITAN_V,
+                                 TPU_V5E, DeviceSpec, get_device)
+from repro.core.perf_model import WorkloadProfile, absolute_profile
+from repro.core.power_model import PowerModel
+from repro.core.realtime import RealTimeBudget, devices_required, extra_hardware
+from repro.core.scheduler import DVFSScheduler, PipelineReport, Stage
+from repro.core.workloads import (FFTCase, fft_workload, paper_lengths,
+                                  roofline_workload)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,169 @@
+"""Execution-time-vs-frequency model: the paper's three regimes, quantified.
+
+The paper (Fig. 6 and the discussion in Sec. 6) observes three behaviours of
+t(f)/t(f_max) as the core clock drops:
+
+  (a) slightly *decreasing* at first  — reduced cache contention,
+  (b) flat, then slightly increasing  — memory-bandwidth bound with
+      compute/issue headroom,
+  (c) increasing with every step      — a core-clocked resource (instruction
+      issue or cache bandwidth) is already saturated at f_max.
+
+We model a step/kernel with these latency components, executed with perfect
+overlap (the bound is the max — the roofline assumption):
+
+  t_mem           HBM traffic            frequency-INDEPENDENT
+  t_coll          interconnect traffic   frequency-INDEPENDENT
+  t_issue(f)      instruction issue      ~ 1/f
+  t_cache(f)      VMEM/L1/shared traffic ~ 1/f  (cache bw scales with clock)
+  t_compute(f)    MXU/FPU flops          ~ 1/f
+
+plus an optional contention term that inflates t_mem at *high* f (regime a).
+All component magnitudes are stored in seconds *at f_max*.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.hardware import DeviceSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadProfile:
+    """A kernel/step as seen by the DVFS model (all times at f_max, seconds)."""
+
+    name: str
+    t_mem: float = 0.0          # HBM traffic (frequency-independent)
+    t_issue: float = 0.0        # instruction-issue bound at f_max
+    t_cache: float = 0.0        # VMEM/L1/shared-memory bound at f_max
+    t_compute: float = 0.0      # MXU/FPU bound at f_max
+    t_coll: float = 0.0         # interconnect (frequency-independent)
+    contention: float = 0.0     # regime-(a) strength: relative t_mem
+    #                             inflation at f_max, fading to 0 at the
+    #                             voltage-floor knee.
+    flops: float = 0.0          # useful FLOPs (for GFLOPS & GFLOPS/W)
+
+    @property
+    def t_core(self) -> float:
+        """Core-clocked bound at f_max."""
+        return max(self.t_issue, self.t_cache, self.t_compute)
+
+    @property
+    def t_flat(self) -> float:
+        """Frequency-independent bound."""
+        return max(self.t_mem, self.t_coll)
+
+    def time(self, f: np.ndarray | float, device: DeviceSpec) -> np.ndarray:
+        """Execution time [s] at core clock ``f`` MHz."""
+        f = np.asarray(f, dtype=np.float64)
+        scale = device.f_max / f
+        knee = device.f_vfloor_frac
+        # Regime (a): cache/HBM contention relief as the core slows down.
+        frac = np.clip((f / device.f_max - knee) / (1.0 - knee), 0.0, 1.0)
+        t_mem_eff = self.t_mem * (1.0 + self.contention * frac)
+        # Issue saturation is superlinear (latency-hiding collapse, Sec. 6);
+        # cache and MXU/FPU bounds scale linearly with 1/f.
+        t_issue = self.t_issue * scale**device.issue_superlinearity
+        t_core = np.maximum(t_issue,
+                            max(self.t_cache, self.t_compute) * scale)
+        t_flat = np.maximum(t_mem_eff, self.t_coll)
+        # Overlap blend: beta=1 -> roofline max (perfect latency hiding),
+        # beta=0 -> fully serialised (the Jetson Nano's two SMs cannot hide
+        # memory latency, so it pays for every clock step: regime c).
+        beta = device.exec_overlap
+        return beta * np.maximum(t_flat, t_core) + (1.0 - beta) * (t_flat + t_core)
+
+    def regime_on(self, device: DeviceSpec) -> str:
+        """Empirically classify into the paper's (a)/(b)/(c) behaviours:
+        evaluate t(f) on the device's actual grid, exactly as Fig. 6 does."""
+        freqs = device.frequencies()
+        t = self.time(freqs, device)
+        if len(t) > 2 and t[2] > t[0] * 1.005:
+            return "c"
+        if t.min() < t[0] * 0.998:
+            return "a"
+        return "b"
+
+    @property
+    def knee_frac(self) -> float:
+        """f/f_max below which a core-clocked resource becomes the bound."""
+        if self.t_flat <= 0:
+            return 1.0
+        return min(self.t_core / self.t_flat, 1.0) if self.t_core > 0 else 0.0
+
+    def regime(self, device: DeviceSpec | None = None) -> str:
+        """Classify into the paper's (a)/(b)/(c) behaviours.
+
+        With a device, classify empirically on its clock grid (preferred —
+        this is what Fig. 6 plots); without one, use the structural bound.
+        """
+        if device is not None:
+            return self.regime_on(device)
+        if self.t_flat <= 0 or self.t_core / self.t_flat >= 0.97:
+            return "c"
+        if self.contention > 0.005:
+            return "a"
+        return "b"
+
+    def _t0(self, device: DeviceSpec) -> float:
+        """Execution time at f_max."""
+        return float(self.time(np.array([device.f_max]), device)[0])
+
+    def core_utilisation(self, device: DeviceSpec) -> float:
+        """How busy the core-clocked resources are at f_max (feeds P(f)).
+
+        Two contributions: the issue/cache duty cycle itself, plus a stall
+        component — on latency-hiding devices (exec_overlap ~ 1) the warps/
+        lanes stay resident and switching even while waiting on memory, so
+        a stalled core still burns roughly half its switching power.  On
+        serialised devices the core clock-gates during memory phases.
+        """
+        t0 = self._t0(device)
+        if t0 <= 0:
+            return 1.0
+        duty = self.t_core / t0
+        stall = device.stall_power_frac * (1.0 - duty)
+        return float(np.clip(duty + stall, 0.05, 1.0))
+
+    def mem_utilisation(self, device: DeviceSpec) -> float:
+        t0 = self._t0(device)
+        return float(np.clip(self.t_mem / t0, 0.0, 1.0)) if t0 > 0 else 0.0
+
+
+def absolute_profile(
+    name: str,
+    *,
+    device: DeviceSpec,
+    hbm_bytes: float,
+    flops: float,
+    issue_efficiency: float = 1.0,
+    cache_bytes: float = 0.0,
+    collective_bytes: float = 0.0,
+    contention: float = 0.0,
+    mxu_flops: float | None = None,
+) -> WorkloadProfile:
+    """Build a profile from absolute traffic/flop counts.
+
+    ``issue_efficiency`` maps raw FLOPs onto the effective issue-limited
+    throughput: achieved_flops = issue_efficiency * peak_flops.  The FFT is
+    far from peak FLOPs (it is a shuffle-heavy butterfly), so its effective
+    ceiling is issue-limited — the paper's Fig. 20 shows issue-slot
+    utilisation is what saturates first.  ``mxu_flops`` (default: ``flops``)
+    is what actually occupies the matrix/vector units.
+    """
+    if mxu_flops is None:
+        mxu_flops = flops
+    t_issue = flops / (device.peak_flops * issue_efficiency) if flops else 0.0
+    return WorkloadProfile(
+        name=name,
+        t_mem=hbm_bytes / device.hbm_bandwidth,
+        t_issue=t_issue,
+        t_cache=cache_bytes / device.cache_bandwidth,
+        t_compute=mxu_flops / device.peak_flops,
+        t_coll=(collective_bytes / device.link_bandwidth
+                if device.link_bandwidth and collective_bytes else 0.0),
+        contention=contention,
+        flops=flops,
+    )

@@ -1,0 +1,64 @@
+"""Analytic DVFS power model.
+
+P(f) = P_static + u_core * P_dyn_max * (f/f_max) * (V(f)/V_max)^2
+              + u_mem  * P_mem_max
+
+The dynamic CMOS term ``f * V(f)^2`` is the standard DVFS scaling used by the
+DVFS literature the paper builds on (Mittal & Vetter 2014; Mei et al. 2017).
+``V(f)`` comes from :class:`repro.core.hardware.DeviceSpec` and carries the
+P-state voltage floor that produces the low-frequency power plateau the
+paper observes in Fig. 8.
+
+``u_core``/``u_mem`` are workload utilisation factors in [0, 1]: a
+memory-bandwidth-bound FFT keeps the memory system saturated (u_mem ~ 1)
+while using a modest fraction of the core's switching capacity.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.hardware import DeviceSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerModel:
+    device: DeviceSpec
+    # Fraction of the (TDP - idle) dynamic envelope attributable to the
+    # memory system when fully utilised.  HBM devices spend a sizeable,
+    # frequency-independent share of board power on the memory stacks.
+    # ``None`` defers to the device's calibrated value.
+    mem_power_frac: float | None = None
+
+    @property
+    def _mem_frac(self) -> float:
+        if self.mem_power_frac is not None:
+            return self.mem_power_frac
+        return self.device.mem_power_frac
+
+    @property
+    def p_dyn_max(self) -> float:
+        return (self.device.tdp - self.device.idle_power) * (1.0 - self._mem_frac)
+
+    @property
+    def p_mem_max(self) -> float:
+        return (self.device.tdp - self.device.idle_power) * self._mem_frac
+
+    def power(
+        self,
+        f: np.ndarray | float,
+        *,
+        u_core: float = 1.0,
+        u_mem: float = 1.0,
+    ) -> np.ndarray:
+        """Board power [W] at core clock ``f`` MHz under the given utilisation."""
+        d = self.device
+        f = np.asarray(f, dtype=np.float64)
+        v_rel = d.voltage(f) / d.v_max
+        # Static/leakage power also scales with supply voltage (~V^2), which
+        # is why the paper's Fig. 8 keeps falling below the compute knee.
+        p_static = d.idle_power * v_rel**2
+        p_core = u_core * self.p_dyn_max * (f / d.f_max) * v_rel**2
+        p_mem = u_mem * self.p_mem_max
+        return p_static + p_core + p_mem

@@ -1,0 +1,184 @@
+"""Workload builders for the DVFS model.
+
+Two producers feed :class:`repro.core.perf_model.WorkloadProfile`:
+
+* :func:`fft_workload` — an analytic model of a batched out-of-place 1-D C2C
+  FFT in the style the paper measures (cuFFT plans on the GPU devices; our
+  Stockham/four-step plans on the TPU).  Traffic and FLOP counts follow
+  Sec. 2.1/5 of the paper:  FLOPs = 5 N log2 N per transform, HBM traffic =
+  one read + one write of the whole batch per *pass*, where a pass is one
+  kernel of the multi-kernel plan.
+
+* :func:`roofline_workload` — built from a *compiled* XLA step: HLO FLOPs
+  and HBM bytes from ``compiled.cost_analysis()`` plus collective bytes
+  parsed from the HLO (see ``repro.analysis.roofline``).  This is how the
+  paper's technique is applied to every assigned architecture cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.hardware import DeviceSpec
+from repro.core.perf_model import WorkloadProfile
+
+
+# Byte sizes of one complex element per precision (paper: C2C transforms).
+COMPLEX_BYTES = {"fp16": 4, "fp32": 8, "fp64": 16}
+
+# Peak-FLOP multiplier per precision relative to the device's FP32 figure
+# (V100-style ratios: FP64 = 1/2, FP16 = 2x).
+PRECISION_PEAK = {"fp16": 2.0, "fp32": 1.0, "fp64": 0.5}
+
+
+def is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def largest_prime_factor(n: int) -> int:
+    p, f = n, 2
+    largest = 1
+    while f * f <= p:
+        while p % f == 0:
+            largest = max(largest, f)
+            p //= f
+        f += 1
+    return max(largest, p if p > 1 else largest)
+
+
+def uses_bluestein(n: int) -> bool:
+    """cuFFT uses Bluestein when a factor exceeds 127 (Sec. 2.1)."""
+    return largest_prime_factor(n) > 127
+
+
+def plan_passes(n: int, *, max_inplace: int = 2**13) -> int:
+    """Number of device-memory passes of the FFT plan.
+
+    A single kernel keeps transforms of length <= ``max_inplace`` resident
+    in shared memory/VMEM (one HBM read + one write).  Longer transforms
+    use the four-step/multi-kernel decomposition: each extra level adds a
+    full read+write pass.  This reproduces the staircase in the paper's
+    Fig. 4 (flat regions separated by jumps at kernel switches).
+    """
+    if n <= max_inplace:
+        return 1
+    # Each pass can fold max_inplace points; levels = ceil(log(n)/log(max)).
+    return max(1, math.ceil(math.log(n) / math.log(max_inplace)))
+
+
+@dataclasses.dataclass(frozen=True)
+class FFTCase:
+    """One measured configuration: a length, precision and batch memory."""
+
+    n: int
+    precision: str = "fp32"
+    batch_bytes: float = 2e9      # paper: ~2 GB of input per batch
+    name: str = ""
+
+    def __post_init__(self):
+        if not self.name:
+            object.__setattr__(
+                self, "name", f"fft-n{self.n}-{self.precision}"
+            )
+
+    @property
+    def elem_bytes(self) -> int:
+        return COMPLEX_BYTES[self.precision]
+
+    @property
+    def n_fft(self) -> int:
+        return max(int(self.batch_bytes // (self.n * self.elem_bytes)), 1)
+
+
+def fft_workload(
+    case: FFTCase,
+    device: DeviceSpec,
+    *,
+    regime_c: bool = False,
+) -> WorkloadProfile:
+    """Analytic profile of a batched FFT on ``device``.
+
+    ``regime_c`` marks plan/length combinations whose kernel saturates a
+    core-clocked cache at f_max (the paper observes this for specific
+    lengths, notably N = 8192 on the V100): the cache term is pinned just
+    above the memory term so every frequency step costs time.
+    """
+    n, b = case.n, case.elem_bytes
+    n_fft = case.n_fft
+    data_bytes = float(n) * b * n_fft
+
+    if uses_bluestein(n):
+        # Bluestein: two forward + one inverse FFT of length M ~ 2N (pow2)
+        # plus three pointwise passes — roughly 3x the traffic and flops.
+        m = 1 << math.ceil(math.log2(2 * n - 1))
+        passes = 3 * plan_passes(m) + 1
+        flops = 3 * 5.0 * m * math.log2(m) * n_fft + 20.0 * n * n_fft
+    else:
+        passes = plan_passes(n)
+        flops = 5.0 * n * math.log2(n) * n_fft
+
+    hbm_bytes = 2.0 * data_bytes * passes          # read + write per pass
+    peak = device.peak_flops * PRECISION_PEAK[case.precision]
+
+    t_mem = hbm_bytes / device.hbm_bandwidth
+    t_issue = flops / (peak * device.issue_efficiency)
+    # Shared/VMEM traffic: every butterfly stage exchanges the working set.
+    stages = max(math.log2(max_pts := min(n, 2**13)), 1.0)
+    cache_bytes = 2.0 * data_bytes * stages / 3.0   # radix-8: log8(N) stages
+    t_cache = cache_bytes / device.cache_bandwidth
+    if regime_c:
+        t_cache = max(t_cache, 1.02 * t_mem)
+    return WorkloadProfile(
+        name=case.name,
+        t_mem=t_mem,
+        t_issue=t_issue,
+        t_cache=t_cache,
+        t_compute=flops / peak,
+        contention=0.01,            # mild regime-(a) relief, Fig. 6
+        flops=flops,
+    )
+
+
+def roofline_workload(
+    name: str,
+    device: DeviceSpec,
+    *,
+    hlo_flops: float,
+    hbm_bytes: float,
+    collective_bytes: float = 0.0,
+    useful_flops: float | None = None,
+    issue_efficiency: float | None = None,
+) -> WorkloadProfile:
+    """Profile a compiled XLA step for the DVFS planner.
+
+    ``issue_efficiency`` defaults to the device's calibrated value; XLA
+    steps dominated by large matmuls run much closer to peak than a
+    butterfly kernel, so callers may pass a higher value (e.g. 0.7-0.9
+    for MXU-saturating training steps).
+    """
+    eff = device.issue_efficiency if issue_efficiency is None else issue_efficiency
+    t_coll = (
+        collective_bytes / device.link_bandwidth
+        if device.link_bandwidth and collective_bytes else 0.0
+    )
+    return WorkloadProfile(
+        name=name,
+        t_mem=hbm_bytes / device.hbm_bandwidth,
+        t_issue=hlo_flops / (device.peak_flops * eff),
+        t_cache=0.0,
+        t_compute=hlo_flops / device.peak_flops,
+        t_coll=t_coll,
+        flops=useful_flops if useful_flops is not None else hlo_flops,
+    )
+
+
+# The FFT-length sweep the paper covers (powers of two 2^5..2^22 plus a few
+# radix-7+/Bluestein lengths for completeness).
+def paper_lengths() -> list[int]:
+    pow2 = [2**k for k in range(5, 23)]
+    other = [3**7, 7**4, 139**2]            # mixed radix-3, radix-7, Bluestein
+    return pow2 + other
+
+
+# V100 lengths the paper singles out as regime (c).
+V100_REGIME_C_LENGTHS = {8192}

@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticTokens, synthetic_batches
+
+__all__ = ["SyntheticTokens", "synthetic_batches"]

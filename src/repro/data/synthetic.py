@@ -1,0 +1,53 @@
+"""Deterministic synthetic token pipeline.
+
+A seeded, stateless stream: batch ``i`` is a pure function of (seed, i),
+so any host can regenerate any shard — this is what makes checkpoint
+restart and elastic re-sharding trivial (no data-loader state to save)
+and provides the straggler-mitigation story: a host that falls behind can
+be reassigned shards without coordination (see repro.runtime.fault).
+
+The "text" is a mixture of Zipf-distributed unigrams and short repeated
+motifs, enough signal for loss-goes-down integration tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticTokens:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+    def batch(self, index: int, *, host_id: int = 0, n_hosts: int = 1
+              ) -> np.ndarray:
+        """Host-sharded batch ``index`` -> (global_batch/n_hosts, seq+1)."""
+        per_host = self.global_batch // n_hosts
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, index, host_id]))
+        # Zipf unigrams clipped to vocab
+        base = rng.zipf(1.3, size=(per_host, self.seq_len + 1))
+        toks = np.minimum(base - 1, self.vocab - 1).astype(np.int32)
+        # motif: every sequence repeats a short pattern (learnable signal)
+        motif_len = 8
+        motif = rng.integers(0, self.vocab, size=(per_host, motif_len))
+        reps = (self.seq_len + 1 + motif_len - 1) // motif_len
+        tiled = np.tile(motif, (1, reps))[:, : self.seq_len + 1]
+        mask = rng.random((per_host, self.seq_len + 1)) < 0.5
+        return np.where(mask, tiled, toks).astype(np.int32)
+
+
+def synthetic_batches(vocab: int, seq_len: int, global_batch: int,
+                      n_steps: int, *, seed: int = 0, host_id: int = 0,
+                      n_hosts: int = 1):
+    """Generator of (inputs, labels) numpy pairs."""
+    ds = SyntheticTokens(vocab, seq_len, global_batch, seed)
+    for i in range(n_steps):
+        b = ds.batch(i, host_id=host_id, n_hosts=n_hosts)
+        yield b[:, :-1], b[:, 1:]

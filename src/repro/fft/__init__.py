@@ -1,0 +1,14 @@
+"""TPU-native FFT substrate: the paper's workload, reimplemented openly.
+
+  stockham     batched radix-2 Stockham autosort FFT (pure jnp, no gathers)
+  bluestein    arbitrary-length FFT via chirp-z (paper Sec. 2.1)
+  multidim     2-D/3-D transforms by axis decomposition (paper Eq. 2)
+  distributed  pencil/four-step FFT across a device mesh (shard_map)
+  pipeline     the paper's pulsar-search pipeline (Sec. 5.3)
+"""
+from repro.fft.bluestein import bluestein_fft
+from repro.fft.multidim import fft2
+from repro.fft.stockham import fft, ifft
+from repro.fft.plan import plan_for_length, FFTPlan
+
+__all__ = ["fft", "ifft", "fft2", "bluestein_fft", "plan_for_length", "FFTPlan"]

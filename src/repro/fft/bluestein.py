@@ -1,0 +1,48 @@
+"""Bluestein (chirp-z) FFT for arbitrary lengths — paper Sec. 2.1.
+
+cuFFT falls back to Bluestein's algorithm when the length has a prime
+factor above 127; we use it for every non-power-of-two length, converting
+one length-N DFT into three power-of-two FFTs of length M >= 2N-1 plus
+pointwise chirp multiplies.  This matches the paper's observation that
+Bluestein lengths cost ~3x and use many kernels (their Sec. 4 notes eleven
+GPU kernels for N=139^2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.fft.stockham import _stockham_pow2
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << (n - 1).bit_length()
+
+
+@functools.partial(jax.jit, static_argnames=("inverse",))
+def bluestein_fft(x: jax.Array, *, inverse: bool = False) -> jax.Array:
+    """C2C DFT of arbitrary length along the last axis via chirp-z."""
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.complexfloating):
+        x = x.astype(jnp.complex64)
+    n = x.shape[-1]
+    m = _next_pow2(2 * n - 1)
+    sign = 1.0 if inverse else -1.0
+    k = jnp.arange(n)
+    # exp(sign * i*pi*k^2/n); k^2 mod 2n keeps the argument small & exact.
+    chirp = jnp.exp(sign * 1j * jnp.pi * ((k * k) % (2 * n)) / n).astype(x.dtype)
+
+    a = jnp.zeros((*x.shape[:-1], m), dtype=x.dtype).at[..., :n].set(x * chirp)
+    b = jnp.zeros(m, dtype=x.dtype)
+    b = b.at[:n].set(jnp.conj(chirp))
+    b = b.at[m - n + 1:].set(jnp.conj(chirp)[1:][::-1])
+
+    fa = _stockham_pow2(a)
+    fb = _stockham_pow2(b)
+    conv = _stockham_pow2(fa * fb, inverse=True)
+    out = conv[..., :n] * chirp
+    if inverse:
+        out = out / n
+    return out

@@ -1,0 +1,102 @@
+"""Distributed FFTs over a device mesh (shard_map + collectives).
+
+Two parallel regimes, matching how the paper's workload scales out:
+
+* **Batch parallel** (:func:`batch_parallel_fft`) — the paper's own setting:
+  many independent transforms, sharded over the ``data`` axis.  No
+  communication at all; this is why the paper can say "FFTs which fit into
+  GPU memory can be easily distributed amongst the GPUs" (Sec. 2.3).
+
+* **Pencil / four-step** (:func:`pencil_fft`) — one transform too long for
+  a device (the SKA long_500k class): view N = n1 * n2, shard n1 across the
+  ``model`` axis, and turn the four-step algorithm's transpose into
+  ``jax.lax.all_to_all``.  This is the TPU-native analogue of cuFFT's
+  multi-kernel long plans, and the piece whose collective term shows up in
+  the roofline analysis.
+
+The output of :func:`pencil_fft` is in *transposed* layout — element
+``[k1, k2]`` of the local (n1_local, n2) block holds bin ``k2 * n1 + k1``
+(FFTW's MPI transposed-output convention).  Use :func:`untranspose_ref`
+on gathered results when validating.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def batch_parallel_fft(x: jax.Array, mesh: Mesh, *, axis: str = "data",
+                       fft_fn=None) -> jax.Array:
+    """Batched FFT with the batch dimension sharded over ``axis``."""
+    from repro.fft.plan import plan_for_length
+    fft_fn = fft_fn or plan_for_length(x.shape[-1])
+    spec = P(axis, None)
+    fn = shard_map(
+        lambda v: fft_fn(v), mesh=mesh, in_specs=(spec,), out_specs=spec
+    )
+    return fn(x)
+
+
+@functools.partial(jax.jit, static_argnames=("n1", "n2", "axis", "mesh"))
+def _pencil_body(x, *, n1, n2, axis, mesh):
+    from repro.fft.stockham import _stockham_pow2
+
+    def local(v):                           # v: (batch, n1/D, n2)
+        d = jax.lax.psum(1, axis)
+        p = jax.lax.axis_index(axis)
+        # ---- transpose 1: gather full n1, scatter n2 -------------------
+        v = jax.lax.all_to_all(v, axis, split_axis=2, concat_axis=1,
+                               tiled=True)      # (batch, n1, n2/D)
+        # ---- FFT over n1 ----------------------------------------------
+        v = jnp.swapaxes(v, -1, -2)             # (batch, n2/D, n1)
+        v = _stockham_pow2(v)
+        # ---- twiddle: exp(-2*pi*i*j*k/n), j = global n2 index ----------
+        n = n1 * n2
+        j_local = jnp.arange(n2 // d) + p * (n2 // d)
+        k = jnp.arange(n1)
+        tw = jnp.exp(-2j * jnp.pi * (j_local[:, None] * k[None, :]) / n)
+        v = v * tw.astype(v.dtype)
+        v = jnp.swapaxes(v, -1, -2)             # (batch, n1, n2/D)
+        # ---- transpose 2: back to n1-sharded ---------------------------
+        v = jax.lax.all_to_all(v, axis, split_axis=1, concat_axis=2,
+                               tiled=True)      # (batch, n1/D, n2)
+        # ---- FFT over n2 ------------------------------------------------
+        v = _stockham_pow2(v)                   # rows are contiguous
+        return v
+
+    spec = P(None, axis, None)
+    return shard_map(local, mesh=mesh, in_specs=(spec,), out_specs=spec)(x)
+
+
+def pencil_fft(x: jax.Array, mesh: Mesh, *, n1: int, n2: int,
+               axis: str = "model") -> jax.Array:
+    """Four-step FFT of length n1*n2 with n1 sharded over ``axis``.
+
+    ``x``: (batch, n1, n2) complex, sharded P(None, axis, None).
+    Returns the transform in transposed layout (see module docstring).
+    """
+    assert x.shape[-2:] == (n1, n2), (x.shape, n1, n2)
+    return _pencil_body(x, n1=n1, n2=n2, axis=axis, mesh=mesh)
+
+
+def untranspose_ref(y: jax.Array, n1: int, n2: int) -> jax.Array:
+    """Reorder a gathered transposed-layout result into natural order."""
+    batch = y.shape[:-2]
+    # y[k1, k2] holds bin k2*n1+k1  ->  natural[k] with k = k2*n1+k1
+    return jnp.swapaxes(y, -1, -2).reshape(*batch, n1 * n2)
+
+
+def pencil_collective_bytes(batch: int, n1: int, n2: int,
+                            n_devices: int, elem_bytes: int = 8) -> float:
+    """Analytic all_to_all traffic per device for the DVFS/roofline model.
+
+    Two all_to_alls; each moves the device's local block (minus the
+    diagonal chunk that stays put): (D-1)/D of batch*n1*n2/D elements.
+    """
+    local = batch * n1 * n2 / n_devices * elem_bytes
+    return 2.0 * local * (n_devices - 1) / n_devices

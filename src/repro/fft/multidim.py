@@ -1,0 +1,33 @@
+"""Multi-dimensional FFTs by axis decomposition — the paper's Eq. (2).
+
+The 2-D (and higher) DFT factorises into independent 1-D DFTs along each
+axis; cuFFT does exactly this (paper Sec. 2.1), so studying the 1-D
+transform covers the higher-dimensional cases.  We expose fft2/fftn built
+on the 1-D planner so every length class (pow2/four-step/Bluestein) is
+usable per axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.fft.plan import plan_for_length
+
+
+def _fft_along(x: jax.Array, axis: int) -> jax.Array:
+    plan = plan_for_length(x.shape[axis])
+    moved = jnp.moveaxis(x, axis, -1)
+    return jnp.moveaxis(plan(moved), -1, axis)
+
+
+def fft2(x: jax.Array, axes: tuple[int, int] = (-2, -1)) -> jax.Array:
+    """2-D C2C FFT over ``axes`` (two sets of 1-D transforms, Eq. 2)."""
+    a0, a1 = axes
+    return _fft_along(_fft_along(x, a1), a0)
+
+
+def fftn(x: jax.Array, axes: tuple[int, ...] | None = None) -> jax.Array:
+    axes = tuple(range(x.ndim)) if axes is None else axes
+    for ax in axes:
+        x = _fft_along(x, ax)
+    return x

@@ -1,0 +1,87 @@
+"""FFT planning — pick the algorithm per length, like cuFFT's planner.
+
+The paper leans on cuFFT's dispatch (Cooley-Tukey for smooth lengths,
+Bluestein otherwise, multi-kernel plans for long transforms).  Our planner
+mirrors it:
+
+  pow2, fits one kernel   -> single fused Stockham pass
+  pow2, long              -> four-step decomposition (two passes + twiddle)
+  non-pow2                -> Bluestein (three pow2 FFTs)
+
+``plan.passes`` feeds the DVFS workload model (HBM traffic = 2 bytes moved
+per pass), keeping the analytic model and the implementation consistent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.fft.bluestein import bluestein_fft
+from repro.fft.stockham import _stockham_pow2, fft as _fft
+
+# Longest transform a single fused pass keeps resident (complex64 in VMEM;
+# 2^13 c64 = 64 KiB per transform — matches the paper's single-kernel range).
+MAX_SINGLE_PASS = 2**13
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class FFTPlan:
+    n: int
+    algorithm: str              # "stockham" | "four-step" | "bluestein"
+    passes: int                 # HBM read+write passes (DVFS model input)
+    fn: Callable[[jax.Array], jax.Array]
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return self.fn(x)
+
+
+def four_step_fft(x: jax.Array, n1: int, n2: int) -> jax.Array:
+    """Long FFT as (n1 x n2) decomposition — Bailey's four-step algorithm.
+
+    1. view as (n1, n2), FFT the columns (length n1, stride n2)
+    2. twiddle by exp(-2*pi*i*j*k/n)
+    3. FFT the rows (length n2)
+    4. read out transposed: out[k2*n1 + k1]
+
+    On a single device both inner FFTs are batched Stockham passes; the
+    distributed version (repro.fft.distributed) turns the transpose into an
+    all_to_all across the mesh — cuFFT's multi-kernel plan, TPU-style.
+    """
+    n = n1 * n2
+    assert x.shape[-1] == n
+    batch = x.shape[:-1]
+    v = x.reshape(*batch, n1, n2)
+    # columns: transpose so the transform axis is last, FFT, transpose back
+    v = jnp.swapaxes(v, -1, -2)                 # (..., n2, n1)
+    v = _stockham_pow2(v)                        # FFT over n1
+    j = jnp.arange(n2)[:, None]
+    k = jnp.arange(n1)[None, :]
+    tw = jnp.exp(-2j * jnp.pi * (j * k) / n).astype(v.dtype)
+    v = v * tw
+    v = _stockham_pow2(jnp.swapaxes(v, -1, -2))  # (..., n1, n2), FFT over n2
+    out = jnp.swapaxes(v, -1, -2).reshape(*batch, n)
+    return out
+
+
+def plan_for_length(n: int) -> FFTPlan:
+    if _is_pow2(n):
+        if n <= MAX_SINGLE_PASS:
+            return FFTPlan(n, "stockham", 1, _fft)
+        n1 = 1 << (int(math.log2(n)) // 2)
+        n2 = n // n1
+        return FFTPlan(
+            n, "four-step", 2,
+            lambda x, n1=n1, n2=n2: four_step_fft(x, n1, n2),
+        )
+    # Bluestein: 3 pow2 FFTs of length m >= 2n-1 plus pointwise passes.
+    m = 1 << (2 * n - 2).bit_length()
+    inner = plan_for_length(m)
+    return FFTPlan(n, "bluestein", 3 * inner.passes + 1, bluestein_fft)

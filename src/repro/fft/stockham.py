@@ -1,0 +1,91 @@
+"""Batched Stockham autosort FFT in pure JAX.
+
+Why Stockham on TPU: the classic Cooley-Tukey in-place FFT needs a
+bit-reversal permutation (a gather — expensive and layout-hostile on TPU).
+The Stockham autosort formulation replaces every permutation with a
+*reshape*: the transform carries a (L, M) factorisation of the length where
+the L axis accumulates already-decided output bits in natural order.  All
+data movement is therefore affine and XLA lowers each stage to elementwise
+ops + reshapes — exactly what the VPU wants, and what the Pallas kernel in
+``repro.kernels.fft`` tiles into VMEM.
+
+The decimation-in-frequency radix-2 step for one length-M transform:
+
+  out[2k]   = F_{M/2}(a + b)[k]               a = x[:M/2], b = x[M/2:]
+  out[2k+1] = F_{M/2}((a - b) * w)[k]         w = exp(-2*pi*i*j/M)
+
+Keeping X shaped (..., L, M): stage t stacks the new output bit in front of
+the L axis, so after log2(N) stages L enumerates outputs in natural order.
+
+Cost: 5 N log2 N real FLOPs — exactly the paper's Eq. (5) convention.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+@functools.partial(jax.jit, static_argnames=("inverse",))
+def _stockham_pow2(x: jax.Array, *, inverse: bool = False) -> jax.Array:
+    """Radix-2 Stockham FFT along the last axis (power-of-two length)."""
+    n = x.shape[-1]
+    assert _is_pow2(n), n
+    sign = 1.0 if inverse else -1.0
+    batch = x.shape[:-1]
+    y = x.reshape(*batch, 1, n)                     # (..., L=1, M=n)
+    m = n
+    l = 1
+    while m > 1:
+        h = m // 2
+        a = y[..., :h]                              # (..., L, M/2)
+        b = y[..., h:]
+        w = jnp.exp(sign * 1j * jnp.pi * jnp.arange(h) / h).astype(x.dtype)
+        even = a + b
+        odd = (a - b) * w
+        # New output bit is the LEAST significant of the undecided bits ->
+        # stack it *before* L so the combined index is bit * L + l.
+        y = jnp.stack([even, odd], axis=-3)         # (..., 2, L, M/2)
+        y = y.reshape(*batch, 2 * l, h)
+        l, m = 2 * l, h
+    out = y.reshape(*batch, n)
+    if inverse:
+        out = out / n
+    return out
+
+
+def fft(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Forward C2C FFT along ``axis``; power-of-two lengths only.
+
+    Non-power-of-two lengths are handled by :mod:`repro.fft.bluestein`
+    (wired together in :mod:`repro.fft.plan`).
+    """
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.complexfloating):
+        x = x.astype(jnp.complex64)
+    if axis != -1 and axis != x.ndim - 1:
+        x = jnp.moveaxis(x, axis, -1)
+        return jnp.moveaxis(_stockham_pow2(x), -1, axis)
+    return _stockham_pow2(x)
+
+
+def ifft(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Inverse C2C FFT along ``axis`` (normalised by 1/N)."""
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.complexfloating):
+        x = x.astype(jnp.complex64)
+    if axis != -1 and axis != x.ndim - 1:
+        x = jnp.moveaxis(x, axis, -1)
+        return jnp.moveaxis(_stockham_pow2(x, inverse=True), -1, axis)
+    return _stockham_pow2(x, inverse=True)
+
+
+def fft_flop_count(n: int, batch: int = 1) -> float:
+    """5 N log2 N per transform — the paper's Eq. (5) accounting."""
+    return 5.0 * n * math.log2(n) * batch

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the pipeline's compute hot-spots.
+
+Each kernel package holds:
+  <name>.py   pl.pallas_call body + BlockSpec VMEM tiling
+  ops.py      jit'd public wrapper (dispatch, dtype plumbing, interpret mode)
+  ref.py      pure-jnp oracle the tests assert against
+
+Kernels:
+  fft           fused-stage Stockham FFT, whole transform VMEM-resident
+  harmonic_sum  strided decimate-and-add harmonic summing (no gathers)
+  spectrum      fused |X|^2 + mean/variance (one HBM pass)
+
+The kernels target TPU (pl.pallas_call + BlockSpec); on this CPU container
+they are validated in interpret mode (``repro.kernels.common.INTERPRET``).
+"""

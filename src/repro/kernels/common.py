@@ -1,0 +1,28 @@
+"""Shared kernel plumbing: interpret-mode detection and tiling helpers."""
+from __future__ import annotations
+
+import jax
+
+
+def use_interpret() -> bool:
+    """Pallas TPU kernels run in interpret mode off-TPU (this container)."""
+    return jax.default_backend() != "tpu"
+
+
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def batch_tile(n: int, elem_bytes: int, *, vmem_budget: int = 8 * 2**20,
+               buffers: int = 4, lane: int = 8) -> int:
+    """Largest batch tile keeping ``buffers`` copies of (tile, n) in VMEM.
+
+    VMEM on v5e is ~128 MiB but we budget a small slice so several kernels
+    and double-buffered DMA windows coexist; ``lane`` aligns the sublane
+    dimension.
+    """
+    per_row = n * elem_bytes * buffers
+    tile = max(vmem_budget // per_row, 1)
+    if tile >= lane:
+        tile = tile // lane * lane
+    return tile

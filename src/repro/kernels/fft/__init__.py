@@ -1,0 +1,3 @@
+from repro.kernels.fft.ops import fft_kernel_c2c
+
+__all__ = ["fft_kernel_c2c"]

@@ -1,0 +1,90 @@
+"""Fused-stage Stockham FFT Pallas kernel.
+
+TPU adaptation of the paper's single-kernel cuFFT plans (DESIGN.md Sec. 3):
+instead of a threadblock exchanging butterflies through shared memory, one
+Pallas program instance keeps a (TILE_B, N) tile of transforms resident in
+VMEM and runs **all** log2(N) Stockham stages before writing back.  HBM
+traffic is exactly one read + one write of the batch — the paper's ideal
+``t_i``-only case (Sec. 5: t_fix = t_i + t_o with t_o -> 0).
+
+Layout notes:
+  * complex data travels as separate (re, im) float32 arrays — TPU Pallas
+    vector memory wants real dtypes, and splitting re/im keeps every
+    butterfly a pure VPU elementwise op with no interleave shuffles;
+  * each stage reshapes the tile (TILE_B, L, M) -> split M -> stack; all
+    affine, no gathers (the Stockham property), so Mosaic lowers them to
+    vreg moves;
+  * twiddles are recomputed per stage with iota/cos/sin rather than loaded,
+    trading cheap VPU transcendentals for HBM bandwidth (the scarce
+    resource — the whole point of the paper is that this kernel is
+    memory-bound).
+
+Grid: 1-D over batch tiles.  BlockSpec pins a (TILE_B, N) window in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stockham_stages(re, im, n: int, *, inverse: bool):
+    """Run all radix-2 Stockham DIF stages on a (B, N) re/im tile pair."""
+    b = re.shape[0]
+    sign = 1.0 if inverse else -1.0
+    re = re.reshape(b, 1, n)
+    im = im.reshape(b, 1, n)
+    l, m = 1, n
+    while m > 1:
+        h = m // 2
+        ar, ai = re[..., :h], im[..., :h]
+        br, bi = re[..., h:], im[..., h:]
+        # twiddle w_j = exp(sign * i*pi*j/h), j broadcast over (B, L, h)
+        j = jax.lax.broadcasted_iota(jnp.float32, (b, l, h), 2)
+        ang = sign * jnp.pi * j / h
+        wr, wi = jnp.cos(ang), jnp.sin(ang)
+        er, ei = ar + br, ai + bi                  # even outputs
+        dr, di = ar - br, ai - bi
+        orr = dr * wr - di * wi                    # odd = (a-b) * w
+        oi = dr * wi + di * wr
+        re = jnp.stack([er, orr], axis=1).reshape(b, 2 * l, h)
+        im = jnp.stack([ei, oi], axis=1).reshape(b, 2 * l, h)
+        l, m = 2 * l, h
+    re = re.reshape(b, n)
+    im = im.reshape(b, n)
+    if inverse:
+        re, im = re / n, im / n
+    return re, im
+
+
+def _fft_body(re_ref, im_ref, out_re_ref, out_im_ref, *, n: int,
+              inverse: bool):
+    re = re_ref[...]
+    im = im_ref[...]
+    out_re, out_im = _stockham_stages(re, im, n, inverse=inverse)
+    out_re_ref[...] = out_re
+    out_im_ref[...] = out_im
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_b", "inverse", "interpret"))
+def fft_pallas(re: jax.Array, im: jax.Array, *, tile_b: int = 8,
+               inverse: bool = False, interpret: bool = False):
+    """Batched pow2 C2C FFT over the last axis; (B, N) re/im in, same out."""
+    b, n = re.shape
+    assert n & (n - 1) == 0, f"pow2 lengths only, got {n}"
+    assert b % tile_b == 0, (b, tile_b)
+    grid = (b // tile_b,)
+    spec = pl.BlockSpec((tile_b, n), lambda i: (i, 0))
+    out_shape = [jax.ShapeDtypeStruct((b, n), re.dtype)] * 2
+    fn = pl.pallas_call(
+        functools.partial(_fft_body, n=n, inverse=inverse),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(re, im)

@@ -1,0 +1,46 @@
+"""Public jit'd wrapper for the fused Stockham FFT kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import batch_tile, use_interpret
+from repro.kernels.fft.fft_kernel import fft_pallas
+
+# One fused pass handles transforms that fit VMEM alongside work buffers.
+MAX_KERNEL_N = 2**13
+
+
+def fft_kernel_c2c(x: jax.Array, *, inverse: bool = False,
+                   interpret: bool | None = None) -> jax.Array:
+    """Batched pow2 C2C FFT (..., N) via the Pallas kernel.
+
+    Accepts complex input, splits to re/im planes for the kernel, and
+    recombines.  Longer-than-VMEM transforms should go through
+    ``repro.fft.plan`` (four-step built on this kernel per pass).
+    """
+    if interpret is None:
+        interpret = use_interpret()
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.complexfloating):
+        x = x.astype(jnp.complex64)
+    n = x.shape[-1]
+    assert n <= MAX_KERNEL_N, (
+        f"N={n} exceeds the single-pass kernel; use repro.fft.plan")
+    lead = x.shape[:-1]
+    b = 1
+    for d in lead:
+        b *= d
+    re = x.real.reshape(b, n).astype(jnp.float32)
+    im = x.imag.reshape(b, n).astype(jnp.float32)
+
+    tile = min(batch_tile(n, 4, buffers=6), b)
+    # pad batch to a tile multiple
+    pad = (-b) % tile
+    if pad:
+        re = jnp.pad(re, ((0, pad), (0, 0)))
+        im = jnp.pad(im, ((0, pad), (0, 0)))
+    out_re, out_im = fft_pallas(re, im, tile_b=tile, inverse=inverse,
+                                interpret=interpret)
+    out = out_re[:b] + 1j * out_im[:b]
+    return out.reshape(*lead, n)

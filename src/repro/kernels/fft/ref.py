@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the FFT kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fft_ref(re: jax.Array, im: jax.Array, *, inverse: bool = False):
+    """Reference via jnp.fft on the recombined complex array."""
+    x = re.astype(jnp.complex64) + 1j * im.astype(jnp.complex64)
+    y = jnp.fft.ifft(x, axis=-1) if inverse else jnp.fft.fft(x, axis=-1)
+    return y.real.astype(re.dtype), y.imag.astype(im.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.harmonic_sum.ops import harmonic_sum_kernel
+
+__all__ = ["harmonic_sum_kernel"]

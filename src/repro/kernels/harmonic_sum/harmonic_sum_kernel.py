@@ -1,0 +1,68 @@
+"""Harmonic-sum Pallas kernel — gather-free decimate-and-add.
+
+GPU pulsar pipelines implement S_h[k] = sum_j P[j*k] with texture/global
+gathers; TPU has no efficient gather, so we ADAPT the algorithm
+(DESIGN.md: rethink for the TPU memory hierarchy):
+
+  P[j*k] over k = 0..ceil(N/j)-1  ==  the stride-j decimation  P[::j]
+
+which is an affine ``lax.slice`` — no gather at all.  Each doubling level
+adds h/2 freshly decimated, zero-padded copies of the VMEM-resident
+spectrum, so level h costs h/2 strided reads of a tile that was loaded
+from HBM exactly once.  Output is the (TILE_B, LEVELS, N) ladder
+(h = 1, 2, 4, ..., H).
+
+Grid: 1-D over batch tiles; the whole spectrum row stays in VMEM because
+harmonic k reaches j*k far beyond any k-tile (k-tiling would need almost
+the entire row anyway — this is the VMEM-vs-HBM trade the paper's Sec. 5
+discussion about overhead accesses t_o maps onto).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decimate(p: jax.Array, j: int) -> jax.Array:
+    """P[:, ::j] zero-padded back to full length (B, N)."""
+    b, n = p.shape
+    if j == 1:
+        return p
+    m = (n + j - 1) // j
+    q = jax.lax.slice(p, (0, 0), (b, (m - 1) * j + 1), (1, j))   # (B, m)
+    return jnp.pad(q, ((0, 0), (0, n - m)))
+
+
+def _hsum_body(p_ref, out_ref, *, n_harmonics: int):
+    p = p_ref[...]                                   # (B, N)
+    levels = int(math.log2(n_harmonics)) + 1
+    acc = p
+    out_ref[:, 0, :] = acc
+    h = 1
+    for lev in range(1, levels):
+        h *= 2
+        for j in range(h // 2 + 1, h + 1):
+            acc = acc + _decimate(p, j)
+        out_ref[:, lev, :] = acc
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_harmonics", "tile_b", "interpret"))
+def harmonic_sum_pallas(power: jax.Array, n_harmonics: int, *,
+                        tile_b: int = 8, interpret: bool = False):
+    b, n = power.shape
+    assert b % tile_b == 0
+    levels = int(math.log2(n_harmonics)) + 1
+    fn = pl.pallas_call(
+        functools.partial(_hsum_body, n_harmonics=n_harmonics),
+        grid=(b // tile_b,),
+        in_specs=[pl.BlockSpec((tile_b, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile_b, levels, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, levels, n), power.dtype),
+        interpret=interpret,
+    )
+    return fn(power)

@@ -1,0 +1,30 @@
+"""Public wrapper for the harmonic-sum kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import batch_tile, use_interpret
+from repro.kernels.harmonic_sum.harmonic_sum_kernel import harmonic_sum_pallas
+
+
+def harmonic_sum_kernel(power: jax.Array, n_harmonics: int = 32, *,
+                        interpret: bool | None = None) -> jax.Array:
+    """(..., N) power spectra -> (..., LEVELS, N) harmonic-sum ladder."""
+    if interpret is None:
+        interpret = use_interpret()
+    assert n_harmonics & (n_harmonics - 1) == 0, "H must be a power of two"
+    power = jnp.asarray(power, jnp.float32)
+    lead = power.shape[:-1]
+    n = power.shape[-1]
+    b = 1
+    for d in lead:
+        b *= d
+    p2 = power.reshape(b, n)
+    tile = min(batch_tile(n, 4, buffers=8), b)
+    pad = (-b) % tile
+    if pad:
+        p2 = jnp.pad(p2, ((0, pad), (0, 0)))
+    out = harmonic_sum_pallas(p2, n_harmonics, tile_b=tile,
+                              interpret=interpret)[:b]
+    return out.reshape(*lead, out.shape[-2], n)

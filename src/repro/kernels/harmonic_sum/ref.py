@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the harmonic-sum kernel.
+
+Definition (zero-padded convention — see kernel docstring):
+
+  S_h[k] = sum_{j=1..h} P[j*k]   with P[i] = 0 for i >= N
+
+Output levels h = 1, 2, 4, ..., n_harmonics (the standard pulsar-search
+doubling ladder).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def harmonic_sum_ref(power: jax.Array, n_harmonics: int) -> jax.Array:
+    n = power.shape[-1]
+    levels = int(math.log2(n_harmonics)) + 1
+    k = jnp.arange(n)
+    outs = []
+    acc = power
+    outs.append(acc)
+    h = 1
+    for _ in range(levels - 1):
+        h *= 2
+        js = jnp.arange(h // 2 + 1, h + 1)
+        idx = js[:, None] * k[None, :]                     # (h/2, n)
+        valid = idx < n
+        gathered = jnp.where(valid, power[..., jnp.minimum(idx, n - 1)], 0.0)
+        acc = acc + jnp.sum(gathered, axis=-2)
+        outs.append(acc)
+    return jnp.stack(outs, axis=-2)

@@ -1,0 +1,3 @@
+from repro.kernels.spectrum.ops import power_spectrum_stats_kernel
+
+__all__ = ["power_spectrum_stats_kernel"]

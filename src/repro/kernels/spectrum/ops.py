@@ -1,0 +1,34 @@
+"""Public wrapper for the fused spectrum kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import batch_tile, use_interpret
+from repro.kernels.spectrum.spectrum_kernel import power_spectrum_stats_pallas
+
+
+def power_spectrum_stats_kernel(x: jax.Array, *,
+                                interpret: bool | None = None):
+    """Complex spectra (..., N) -> (power (..., N), mean (...,), std (...,))."""
+    if interpret is None:
+        interpret = use_interpret()
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.complexfloating):
+        x = x.astype(jnp.complex64)
+    lead, n = x.shape[:-1], x.shape[-1]
+    b = 1
+    for d in lead:
+        b *= d
+    re = x.real.reshape(b, n).astype(jnp.float32)
+    im = x.imag.reshape(b, n).astype(jnp.float32)
+    tile = min(batch_tile(n, 4, buffers=5), b)
+    pad = (-b) % tile
+    if pad:
+        re = jnp.pad(re, ((0, pad), (0, 0)))
+        im = jnp.pad(im, ((0, pad), (0, 0)))
+    p, mean, var = power_spectrum_stats_pallas(re, im, tile_b=tile,
+                                               interpret=interpret)
+    std = jnp.sqrt(jnp.maximum(var, 0.0))
+    return (p[:b].reshape(*lead, n), mean[:b].reshape(lead),
+            std[:b].reshape(lead))

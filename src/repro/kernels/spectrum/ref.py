@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused power-spectrum + stats kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def power_spectrum_stats_ref(re: jax.Array, im: jax.Array):
+    """(B, N) re/im spectrum -> (power (B,N), mean (B,), std (B,)).
+
+    power = |X|^2 / N; mean/std taken over each spectrum row.
+    """
+    n = re.shape[-1]
+    p = (re.astype(jnp.float32) ** 2 + im.astype(jnp.float32) ** 2) / n
+    mean = jnp.mean(p, axis=-1)
+    std = jnp.std(p, axis=-1)
+    return p, mean, std

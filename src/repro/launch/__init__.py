@@ -1,0 +1,1 @@
+"""Launch package: production mesh, dry-run, train and serve drivers."""

@@ -1,0 +1,116 @@
+"""Batched serving driver: prefill + decode loop with DVFS clock plan.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \\
+      --batch 4 --prompt-len 32 --gen 16
+
+Serving is where the paper's result bites hardest: decode steps are
+memory-bandwidth bound (KV-cache reads dominate), i.e. exactly the
+workload class where 40-60% of the clock can be dropped nearly for free.
+``--dvfs-report`` prints the per-phase (prefill vs decode) clock plan —
+prefill is compute-bound and stays near boost; decode drops to the knee.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.dvfs import sweep
+from repro.core.hardware import TPU_V5E
+from repro.core.scheduler import DVFSScheduler, Stage
+from repro.core.workloads import roofline_workload
+from repro.models.api import build_model
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--dvfs-report", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    total_len = args.prompt_len + args.gen
+    if cfg.input_mode == "embeds":
+        prompt = jax.random.normal(jax.random.PRNGKey(1),
+                                   (args.batch, args.prompt_len,
+                                    cfg.d_model), jnp.float32)
+    else:
+        prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                    (args.batch, args.prompt_len), 0,
+                                    cfg.vocab)
+
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode)
+
+    logits, cache = prefill(params, prompt)
+    # grow caches to the full decode length
+    def grow(a):
+        if a.ndim >= 3 and a.shape[-3] == args.prompt_len:
+            pad = [(0, 0)] * a.ndim
+            pad[-3] = (0, args.gen)
+            return jnp.pad(a, pad)
+        # transformer kv caches: (..., B, S, KV, hd) with S at -3;
+        # mamba conv/state caches have no seq axis -> unchanged
+        return a
+    def grow_kv(a):
+        for ax in range(a.ndim):
+            if a.shape[ax] == args.prompt_len:
+                pad = [(0, 0)] * a.ndim
+                pad[ax] = (0, args.gen)
+                return jnp.pad(a, pad)
+        return a
+    cache = jax.tree.map(grow_kv, cache)
+
+    tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+    generated = [np.asarray(tok)]
+    for i in range(args.gen - 1):
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+        generated.append(np.asarray(tok))
+    out = np.concatenate(generated, axis=1)
+    print(f"[serve] generated {out.shape} tokens; first row: {out[0][:12]}")
+
+    if args.dvfs_report:
+        dev = TPU_V5E
+        # analytic per-phase profiles (full config accounting)
+        full = get_arch(args.arch)
+        nbytes = full.param_count() * 2
+        prefill_prof = roofline_workload(
+            "prefill", dev,
+            hlo_flops=2 * full.param_count() * args.batch * args.prompt_len,
+            hbm_bytes=nbytes, issue_efficiency=0.8)
+        cache_bytes = (full.n_layers * 2 * full.n_kv_heads
+                       * full.resolved_head_dim * total_len * args.batch * 2)
+        decode_prof = roofline_workload(
+            "decode", dev,
+            hlo_flops=2 * full.param_count() * args.batch,
+            hbm_bytes=nbytes + cache_bytes, issue_efficiency=0.8)
+        sched = DVFSScheduler(dev)
+        plan = []
+        for prof in (prefill_prof, decode_prof):
+            res = sweep(prof, dev)
+            plan.append(Stage(prof, res.optimal.f))
+            print(f"[dvfs] {prof.name}: bound={prof.regime(dev)!r} "
+                  f"optimal={res.optimal.f:.0f} MHz, "
+                  f"power cut {100*res.power_reduction:.0f}%, "
+                  f"slowdown {100*res.slowdown:.1f}%")
+        rep = sched.evaluate_pipeline(plan)
+        print(f"[dvfs] serve pipeline I_ef={rep.i_ef:.2f} "
+              f"(slowdown {100*rep.slowdown:.1f}%)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

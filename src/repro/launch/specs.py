@@ -1,0 +1,138 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every dry-run cell.
+
+Weak-type-correct, shardable, no device allocation — the full configs are
+exercised ONLY through these (smoke tests use reduced configs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models.api import Model, build_model
+from repro.models.common import dtype_of
+
+
+def _batch_spec(mesh, *trailing) -> P:
+    names = mesh.axis_names
+    b = ("pod", "data") if "pod" in names else ("data",)
+    return P(b, *trailing)
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def fix_sharding(shape: tuple[int, ...], spec: P, mesh) -> P:
+    """Make ``spec`` divisibility-correct for ``shape`` on ``mesh``.
+
+    jit in_shardings require every sharded dim to divide exactly.  Where a
+    dim does not (e.g. kv_heads=2 over a 16-way model axis, or vocab=50280),
+    the offending mesh axes are MOVED to the largest dim that can absorb
+    them (appending to that dim's existing axes), else dropped.  For decode
+    caches this turns head-sharding into sequence-sharding — split-KV
+    decode, where attention partial-sums over the cache shards and GSPMD
+    inserts the reduction.
+    """
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    homeless: list[str] = []
+    for i, (dim, axes) in enumerate(zip(shape, entries)):
+        if axes is None:
+            continue
+        tup = (axes,) if isinstance(axes, str) else tuple(axes)
+        keep: list[str] = []
+        for a in tup:
+            cur = _axis_size(mesh, tuple(keep) + (a,))
+            if dim % cur == 0:
+                keep.append(a)
+            else:
+                homeless.append(a)
+        entries[i] = tuple(keep) if keep else None
+    for a in homeless:
+        # place on the largest dim that can absorb this axis
+        cands = []
+        for i, dim in enumerate(shape):
+            cur = entries[i]
+            cur_t = () if cur is None else (
+                (cur,) if isinstance(cur, str) else tuple(cur))
+            if a in cur_t:
+                continue
+            combined = _axis_size(mesh, cur_t + (a,))
+            if dim % combined == 0:
+                cands.append((dim // _axis_size(mesh, cur_t), i, cur_t))
+        if cands:
+            _, i, cur_t = max(cands)
+            entries[i] = cur_t + (a,)
+        # else: drop (replicate over that axis)
+    cleaned = [e if e is None or isinstance(e, str) else
+               (e[0] if len(e) == 1 else e) for e in entries]
+    while cleaned and cleaned[-1] is None:
+        cleaned.pop()
+    return P(*cleaned)
+
+
+def fix_tree(sds_tree, spec_tree, mesh):
+    """NamedShardings for a pytree, with divisibility fixes per leaf."""
+    return jax.tree.map(
+        lambda sds, sp: NamedSharding(mesh, fix_sharding(sds.shape, sp,
+                                                         mesh)),
+        sds_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, mesh) -> dict:
+    """ShapeDtypeStructs + shardings for one (arch x shape x mesh) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = dtype_of(cfg)
+    model = build_model(cfg)
+
+    def sds(shp, dtype, spec):
+        spec = fix_sharding(shp, spec, mesh)
+        return (jax.ShapeDtypeStruct(shp, dtype), NamedSharding(mesh, spec))
+
+    if shape.kind == "train":
+        if cfg.input_mode == "embeds":
+            inputs = sds((b, s, cfg.d_model), dt, _batch_spec(mesh, None,
+                                                              None))
+        else:
+            inputs = sds((b, s), jnp.int32, _batch_spec(mesh, None))
+        labels = sds((b, s), jnp.int32, _batch_spec(mesh, None))
+        return {"inputs": inputs, "labels": labels}
+
+    if shape.kind == "prefill":
+        if cfg.input_mode == "embeds":
+            inputs = sds((b, s, cfg.d_model), dt,
+                         _batch_spec(mesh, None, None))
+        else:
+            inputs = sds((b, s), jnp.int32, _batch_spec(mesh, None))
+        return {"inputs": inputs}
+
+    # decode: one new token + full cache of seq_len
+    if cfg.input_mode == "embeds":
+        token = sds((b, 1, cfg.d_model), dt, _batch_spec(mesh, None, None))
+    else:
+        token = sds((b, 1), jnp.int32, _batch_spec(mesh, None))
+    cache_sds = model.cache_shapes(b, s)
+    cache_spec = model.cache_specs()
+
+    def remap(spec: P) -> P:
+        """Map 'data' -> ('pod','data') batch group on multi-pod meshes."""
+        if "pod" not in mesh.axis_names:
+            return spec
+        return P(*[("pod", "data") if x == "data" else x for x in spec])
+
+    cache = jax.tree.map(
+        lambda sd, sp: (sd, NamedSharding(
+            mesh, fix_sharding(sd.shape, remap(sp), mesh))),
+        cache_sds, cache_spec,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)),
+    )
+    return {"token": token, "cache": cache}

@@ -1,0 +1,14 @@
+"""Model zoo: the 10 assigned architectures as config-driven JAX models.
+
+  common       norms, RoPE, initialisation, loss
+  attention    chunked flash-style GQA attention (+sliding window, KV cache)
+  mla          DeepSeek multi-head latent attention (compressed KV cache)
+  moe          GShard-style top-k mixture with expert parallelism
+  transformer  config-driven decoder LM (covers 8 of 10 archs)
+  mamba2       SSD (state-space duality) backbone
+  zamba2       hybrid: Mamba2 backbone + shared attention block
+  api          build_model(cfg) -> Model(init, forward, prefill, decode, specs)
+"""
+from repro.models.api import Model, build_model
+
+__all__ = ["Model", "build_model"]

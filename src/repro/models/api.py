@@ -1,0 +1,50 @@
+"""Unified model API: build_model(cfg) -> Model.
+
+All three implementations (transformer / mamba2 / zamba2) expose the same
+five functions so the launcher, trainer and dry-run treat every assigned
+architecture uniformly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.configs.base import ArchConfig
+from repro.models import mamba2, transformer, zamba2
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[..., Any]              # (rng) -> params
+    forward: Callable[..., Any]           # (params, inp) -> (logits, aux)
+    prefill: Callable[..., Any]           # (params, inp) -> (logits, cache)
+    decode: Callable[..., Any]            # (params, cache, tok) -> (logits, cache)
+    forward_hidden: Callable[..., Any]    # (params, inp) -> (hidden, aux)
+    unembed: Callable[..., Any]           # (params, hidden) -> logits
+    param_specs: Callable[[], Any]
+    cache_shapes: Callable[..., Any]      # (batch, seq) -> SDS pytree
+    cache_specs: Callable[[], Any]
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family == "hybrid":
+        mod = zamba2
+    elif cfg.family == "ssm":
+        mod = mamba2
+    else:
+        mod = transformer
+    return Model(
+        cfg=cfg,
+        init=lambda rng: mod.init_params(rng, cfg),
+        forward=lambda params, inp: mod.forward(params, inp, cfg),
+        prefill=lambda params, inp: mod.prefill_step(params, inp, cfg),
+        decode=lambda params, cache, tok: mod.decode_step(params, cache,
+                                                          tok, cfg),
+        forward_hidden=lambda params, inp: mod.forward_hidden(params, inp,
+                                                              cfg),
+        unembed=lambda params, h: mod.unembed(params, h, cfg),
+        param_specs=lambda: mod.param_specs(cfg),
+        cache_shapes=lambda batch, seq: mod.cache_shapes(cfg, batch, seq),
+        cache_specs=lambda: mod.cache_specs(cfg),
+    )

@@ -1,0 +1,105 @@
+"""Memory-efficient GQA attention with sliding-window and KV-cache support.
+
+Training/prefill use a flash-style chunked softmax: an online
+(max, sum, acc) reduction scanned over KV chunks, so the (S, S) score
+matrix never materialises — at 32k prefill the transient is (B, H, S, CHUNK)
+instead of (B, H, S, S).  Causal and sliding-window masks are applied per
+chunk; fully-masked chunks still lower fine (the dry-run is shape-level).
+
+Decode attends one query position against the cached KV — a pair of
+einsums, memory-bound by the cache read, which is exactly the workload
+class the paper's DVFS result targets (see EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _chunk_attn(q, k, v, *, q_offset, window: int | None, chunk: int):
+    """Online-softmax attention.
+
+    q: (B, Sq, H, D); k/v: (B, Sk, KV, D).  Causal w.r.t. absolute
+    positions (q position = q_offset + i, k position = j).
+    """
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    groups = h // kv
+    qg = q.reshape(b, sq, kv, groups, d)
+    scale = d ** -0.5
+
+    n_chunks = max(sk // chunk, 1)
+    csize = sk // n_chunks
+
+    def body(carry, idx):
+        acc, m, l = carry
+        start = idx * csize
+        kc = jax.lax.dynamic_slice_in_dim(k, start, csize, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, start, csize, axis=1)
+        s = jnp.einsum("bqkgd,bjkd->bqkgj", qg, kc,
+                       preferred_element_type=jnp.float32) * scale
+        qpos = q_offset + jnp.arange(sq)[:, None]
+        jpos = start + jnp.arange(csize)[None, :]
+        mask = qpos >= jpos                                   # causal
+        if window is not None:
+            mask &= (qpos - jpos) < window
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bqkgj,bjkd->bqkgd", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, sq, kv, groups, dv), jnp.float32)
+    m0 = jnp.full((b, sq, kv, groups), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, kv, groups), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0),
+                                  jnp.arange(n_chunks))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def attention(q, k, v, *, causal_offset: int = 0,
+              window: int | None = None, chunk: int = 1024) -> jax.Array:
+    """Chunked causal (optionally windowed) GQA attention."""
+    sk = k.shape[1]
+    chunk = min(chunk, sk)
+    # make chunk divide sk (shapes here are powers of two)
+    while sk % chunk:
+        chunk //= 2
+    return _chunk_attn(q, k, v, q_offset=causal_offset, window=window,
+                       chunk=max(chunk, 1))
+
+
+def decode_attention(q, k_cache, v_cache, *, cache_len: int | None = None,
+                     window: int | None = None) -> jax.Array:
+    """One-token attention against a (B, S_cache, KV, D) cache.
+
+    q: (B, 1, H, D).  ``cache_len`` is the current valid length (static
+    here: dry-run decodes against a full cache, the paper's decode_32k /
+    long_500k cells).
+    """
+    b, _, h, d = q.shape
+    sk, kv = k_cache.shape[1], k_cache.shape[2]
+    groups = h // kv
+    qg = q.reshape(b, kv, groups, d)
+    s = jnp.einsum("bkgd,bjkd->bkgj", qg, k_cache,
+                   preferred_element_type=jnp.float32) * d ** -0.5
+    valid_len = cache_len if cache_len is not None else sk
+    jpos = jnp.arange(sk)
+    mask = jpos < valid_len
+    if window is not None:
+        mask &= jpos >= (valid_len - window)
+    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgj,bjkd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)

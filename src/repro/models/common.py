@@ -1,0 +1,154 @@
+"""Shared model components: norms, RoPE, init, loss."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(q: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding; q: (..., S, H, D), positions: (..., S)."""
+    d = q.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    q1, q2 = q[..., :half], q[..., half:]
+    out = jnp.concatenate(
+        [q1 * cos - q2 * sin, q2 * cos + q1 * sin], axis=-1)
+    return out.astype(q.dtype)
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    s = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape) * s).astype(dtype)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy; logits (..., V) f32-accumulated."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def chunked_cross_entropy(unembed_fn, hidden: jax.Array,
+                          labels: jax.Array, *, chunk: int = 512
+                          ) -> jax.Array:
+    """CE without materialising the full (B, S, V) logits.
+
+    The unembed + softmax runs per sequence-chunk inside a rematerialised
+    scan, so the transient is (B, chunk, V) — at gemma3's 262k vocab and
+    1M tokens this is the difference between ~4 GB and ~0.5 GB per device
+    (see EXPERIMENTS.md §Perf).
+    """
+    b, s = labels.shape
+    c = min(chunk, s)
+    while s % c:
+        c //= 2
+    n = s // c
+    h_c = hidden.reshape(b, n, c, hidden.shape[-1]).swapaxes(0, 1)
+    l_c = labels.reshape(b, n, c).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(acc, hc_lc):
+        hc, lc = hc_lc
+        logits = unembed_fn(hc).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (h_c, l_c))
+    return total / (b * s)
+
+
+# ---------------------------------------------------------------------------
+# Sharding vocabulary.  Meshes use axes ("data", "model") and optionally a
+# leading "pod" axis that is pure DP (params replicated across pods).
+# Large 2-D weights are sharded over BOTH axes (TP on the feature axis,
+# FSDP/ZeRO-style on the other) so 100B+ models fit 16 GB chips.
+# ---------------------------------------------------------------------------
+
+REPLICATED = P()
+
+
+def spec_embed() -> P:           # (vocab, d): vocab-TP for the 262k vocabs
+    return P("model", "data")
+
+
+def spec_in_proj() -> P:         # (d, features): features on TP axis
+    return P("data", "model")
+
+
+def spec_out_proj() -> P:        # (features, d)
+    return P("model", "data")
+
+
+def spec_expert_in() -> P:       # (E, d, ff): experts on TP axis (EP)
+    return P("model", None, "data")
+
+
+def spec_expert_out() -> P:      # (E, ff, d)
+    return P("model", "data", None)
+
+
+def spec_vector() -> P:          # per-feature vectors (norm scales, biases)
+    return P()
+
+
+def stack_specs(spec: P) -> P:
+    """Prepend the layer-stack axis (unsharded) to a per-layer spec."""
+    return P(None, *spec)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding (Megatron-SP style).  The launcher installs a
+# NamedSharding for inter-layer activations: batch over the data axes and
+# SEQUENCE over the model axis — the scan carry saved for backward then
+# scales down with the whole mesh, and GSPMD inserts the all-gather /
+# reduce-scatter pair around each block's matmuls (the SP pattern).
+# ---------------------------------------------------------------------------
+
+_ACT_SHARDING = None
+
+# Named beyond-baseline optimisations, toggled by the launcher/dry-run
+# (--opt <name>).  Each §Perf iteration is one entry here so A/B lowering
+# is a flag flip, not a code fork.
+PERF_OPTS: set = set()
+
+
+class activation_sharding:
+    """Context manager: install the inter-layer activation sharding."""
+
+    def __init__(self, mesh, batch_axes=("data",)):
+        from jax.sharding import NamedSharding
+        self.sharding = NamedSharding(mesh, P(batch_axes, "model", None))
+
+    def __enter__(self):
+        global _ACT_SHARDING
+        self._old = _ACT_SHARDING
+        _ACT_SHARDING = self.sharding
+        return self
+
+    def __exit__(self, *exc):
+        global _ACT_SHARDING
+        _ACT_SHARDING = self._old
+        return False
+
+
+def constrain_acts(h):
+    """Apply the installed activation sharding to a (B, S, d) tensor."""
+    if _ACT_SHARDING is not None and h.ndim == 3 and h.shape[1] > 1:
+        return jax.lax.with_sharding_constraint(h, _ACT_SHARDING)
+    return h

@@ -1,0 +1,302 @@
+"""Mamba2 — SSD (state-space duality) backbone [arXiv:2405.21060].
+
+Chunked SSD forward: the sequence is split into chunks of Q tokens; within
+a chunk the output is a masked quadratic form (the "attention-like" dual),
+across chunks a linear state recurrence carries (H, P, N) states.  Decode
+is a single O(1) state update — why this family runs the long_500k cell.
+
+Shapes: inner = expand * d_model = H * P heads; B/C share one state group
+(ngroups = 1, the published 370M config).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+from repro.models.common import dense_init, rms_norm
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    inner = s.expand * cfg.d_model
+    n_heads = inner // s.head_dim
+    return inner, n_heads, s.head_dim, s.state_dim
+
+
+def init_mamba_block(key, cfg: ArchConfig, dtype) -> dict:
+    inner, h, p_dim, n = _dims(cfg)
+    conv_dim = inner + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": jnp.zeros((cfg.d_model,), dtype),
+        "in_proj": dense_init(ks[0],
+                              (cfg.d_model, 2 * inner + 2 * n + h), dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm.conv_width, conv_dim), dtype,
+                             scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "gate_norm": jnp.zeros((inner,), dtype),
+        "out_proj": dense_init(ks[2], (inner, cfg.d_model), dtype),
+    }
+
+
+def mamba_block_specs(cfg: ArchConfig) -> dict:
+    return {
+        "ln": P(), "in_proj": cm.spec_in_proj(), "conv_w": P(None, "model"),
+        "conv_b": P("model"), "A_log": P(), "D": P(), "dt_bias": P(),
+        "gate_norm": P("model"), "out_proj": cm.spec_out_proj(),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds (width is small & static)."""
+    width = w.shape[0]
+    out = xbc * w[-1]
+    for i in range(1, width):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, :-i or None, :]
+        shifted = shifted[:, :xbc.shape[1], :]
+        out = out + shifted * w[width - 1 - i]
+    return jax.nn.silu(out + b)
+
+
+def _segsum(dacum: jax.Array) -> jax.Array:
+    """L[l, s] = exp(dacum[l] - dacum[s]) masked to l >= s; (..., Q)."""
+    q = dacum.shape[-1]
+    diff = dacum[..., :, None] - dacum[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def _ssd_chunked(xs, dt, bmat, cmat, a_log, chunk: int):
+    """Chunked SSD scan.
+
+    xs: (B, S, H, P)  dt: (B, S, H)  bmat/cmat: (B, S, N)
+    Returns y (B, S, H, P) and the final state (B, H, P, N).
+    """
+    b, s, h, p = xs.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+    nc = s // q
+    a = -jnp.exp(a_log)                                   # (H,)
+    da = dt * a                                           # (B, S, H)
+
+    xs_c = xs.reshape(b, nc, q, h, p)
+    dt_c = dt.reshape(b, nc, q, h)
+    da_c = da.reshape(b, nc, q, h)
+    b_c = bmat.reshape(b, nc, q, n)
+    c_c = cmat.reshape(b, nc, q, n)
+
+    dacum = jnp.cumsum(da_c, axis=2)                      # (B, C, Q, H)
+    xdt = xs_c * dt_c[..., None]                          # (B, C, Q, H, P)
+
+    # ---- intra-chunk (quadratic dual) --------------------------------
+    lmat = _segsum(jnp.moveaxis(dacum, -1, -2))           # (B, C, H, Q, Q)
+    scores = jnp.einsum("bcln,bcsn->bcls", c_c, b_c,
+                        preferred_element_type=jnp.float32)
+    y_diag = jnp.einsum("bcls,bchls,bcshp->bclhp",
+                        scores, lmat, xdt.astype(jnp.float32))
+
+    # ---- chunk states + inter-chunk recurrence ------------------------
+    decay_out = jnp.exp(dacum[:, :, -1:, :] - dacum)      # (B, C, Q, H)
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchpn", b_c.astype(jnp.float32),
+                        decay_out, xdt.astype(jnp.float32))
+    chunk_decay = jnp.exp(dacum[:, :, -1, :])             # (B, C, H)
+
+    def scan_fn(carry, inp):
+        st_c, dec = inp
+        new = carry * dec[..., None, None] + st_c
+        return new, carry                                 # emit PRE-state
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)         # (B, C, H, P, N)
+
+    decay_in = jnp.exp(dacum)                             # (B, C, Q, H)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp",
+                       c_c.astype(jnp.float32), prev_states, decay_in)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(xs.dtype), final
+
+
+def mamba_block(params, x, cfg: ArchConfig, *, return_state: bool = False):
+    """x: (B, S, d) -> (B, S, d) [+ (conv_tail, state) when prefilling]."""
+    inner, h, p_dim, n = _dims(cfg)
+    res = x
+    xn = rms_norm(x, params["ln"], cfg.norm_eps)
+    proj = xn @ params["in_proj"]
+    z = proj[..., :inner]
+    xbc = proj[..., inner:inner + inner + 2 * n]
+    dt_raw = proj[..., -h:]
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs = xbc[..., :inner].reshape(*xbc.shape[:2], h, p_dim)
+    bmat = xbc[..., inner:inner + n]
+    cmat = xbc[..., inner + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    y, state = _ssd_chunked(xs, dt, bmat, cmat, params["A_log"],
+                            cfg.ssm.chunk)
+    y = y + (params["D"][:, None] * xs.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(*y.shape[:2], inner)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    out = cm.constrain_acts(res + y @ params["out_proj"])
+    if return_state:
+        w = cfg.ssm.conv_width
+        pre_conv = proj[..., inner:inner + inner + 2 * n]
+        conv_tail = pre_conv[:, -(w - 1):, :]
+        return out, (conv_tail, state)
+    return out
+
+
+def mamba_decode(params, x, cache, cfg: ArchConfig):
+    """One-token state update.  cache = {"conv": (B, W-1, CD), "state": ...}."""
+    inner, h, p_dim, n = _dims(cfg)
+    res = x
+    xn = rms_norm(x, params["ln"], cfg.norm_eps)
+    proj = xn @ params["in_proj"]                         # (B, 1, ...)
+    z = proj[..., :inner]
+    xbc_new = proj[..., inner:inner + inner + 2 * n]
+    dt_raw = proj[..., -h:]
+    # conv over [cached, new]
+    window = jnp.concatenate([cache["conv"], xbc_new], axis=1)  # (B, W, CD)
+    w = params["conv_w"]
+    xbc = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, w)
+                      + params["conv_b"])[:, None, :]
+    xs = xbc[..., :inner].reshape(-1, 1, h, p_dim)
+    bmat = xbc[..., inner:inner + n]
+    cmat = xbc[..., inner + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+    da = jnp.exp(dt[:, 0, :] * a)                         # (B, H)
+    state = cache["state"] * da[..., None, None] + jnp.einsum(
+        "bn,bhp->bhpn", bmat[:, 0].astype(jnp.float32),
+        (xs[:, 0] * dt[:, 0, :, None]).astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0].astype(jnp.float32), state)
+    y = y + params["D"][:, None] * xs[:, 0].astype(jnp.float32)
+    y = y.reshape(-1, 1, inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    out = res + y @ params["out_proj"]
+    new_cache = {"conv": window[:, 1:, :], "state": state}
+    return out, new_cache
+
+
+def mamba_cache_shapes(cfg: ArchConfig, batch: int):
+    inner, h, p_dim, n = _dims(cfg)
+    conv_dim = inner + 2 * n
+    w = cfg.ssm.conv_width
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, w - 1, conv_dim),
+                                     cm.dtype_of(cfg)),
+        "state": jax.ShapeDtypeStruct((batch, h, p_dim, n), jnp.float32),
+    }
+
+
+def mamba_cache_specs(cfg: ArchConfig):
+    return {"conv": P("data", None, "model"),
+            "state": P("data", "model", None, None)}
+
+
+# ---------------------------------------------------------------------------
+# Full LM
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    dtype = cm.dtype_of(cfg)
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = [init_mamba_block(k, cfg, dtype) for k in keys]
+    return {
+        "embed": dense_init(k_embed, (cfg.vocab, cfg.d_model), dtype,
+                            scale=1.0),
+        "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *stacked),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": dense_init(k_head, (cfg.d_model, cfg.vocab), dtype),
+    }
+
+
+def param_specs(cfg: ArchConfig):
+    block = mamba_block_specs(cfg)
+    return {
+        "embed": cm.spec_embed(),
+        "layers": jax.tree.map(lambda s: P(None, *s), block,
+                               is_leaf=lambda x: isinstance(x, P)),
+        "final_norm": P(),
+        "lm_head": P("data", "model"),
+    }
+
+
+def forward_hidden(params, tokens, cfg: ArchConfig):
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def body(h, lp):
+        return mamba_block(lp, h, cfg), None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), \
+        jnp.zeros((), jnp.float32)
+
+
+def unembed(params, h, cfg: ArchConfig):
+    return jnp.einsum("bsd,dv->bsv", h, params["lm_head"],
+                      preferred_element_type=jnp.float32)
+
+
+def forward(params, tokens, cfg: ArchConfig):
+    h, aux = forward_hidden(params, tokens, cfg)
+    return unembed(params, h, cfg), aux
+
+
+def prefill_step(params, tokens, cfg: ArchConfig):
+    """Forward that also returns the (conv tail, SSM state) caches."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    def body(h, lp):
+        h, (conv_tail, state) = mamba_block(lp, h, cfg, return_state=True)
+        return h, {"conv": conv_tail, "state": state}
+
+    x, cache = jax.lax.scan(body, x, params["layers"])
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h[:, -1:, :], params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    return logits, {"layers": cache}
+
+
+def cache_shapes(cfg: ArchConfig, batch: int, seq: int):
+    per = mamba_cache_shapes(cfg, batch)
+    return {"layers": jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((cfg.n_layers, *s.shape), s.dtype),
+        per)}
+
+
+def cache_specs(cfg: ArchConfig):
+    per = mamba_cache_specs(cfg)
+    return {"layers": jax.tree.map(lambda s: P(None, *s), per,
+                                   is_leaf=lambda x: isinstance(x, P))}
+
+
+def decode_step(params, cache, token, cfg: ArchConfig):
+    x = jnp.take(params["embed"], token, axis=0)
+
+    def body(h, lp_lc):
+        lp, lc = lp_lc
+        h, c2 = mamba_decode(lp, h, lc, cfg)
+        return h, c2
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"],
+                                          cache["layers"]))
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    return logits, {"layers": new_cache}

@@ -1,0 +1,110 @@
+"""GShard-style top-k mixture-of-experts with expert parallelism.
+
+Dispatch is capacity-based within token groups: tokens are split into
+``n_groups`` groups that route independently, keeping the one-hot dispatch
+tensor small (the standard GShard/Switch trick).  Experts are sharded over
+the ``model`` mesh axis (expert parallelism): the dispatch einsum induces
+the all-to-all that shows up in the roofline's collective term — this is
+the collective-bound cell class the DVFS planner flags (EXPERIMENTS.md).
+
+Router: softmax top-k, probabilities renormalised over the selected
+experts, with an auxiliary load-balancing loss (Switch-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models import common as cm
+from repro.models.common import dense_init
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig, dtype) -> dict:
+    ks = jax.random.split(key, 5)
+    e = cfg.n_experts
+    ff = cfg.d_ff_expert
+    p = {
+        "router": dense_init(ks[0], (d_model, e), jnp.float32),
+        "w_gate": dense_init(ks[1], (e, d_model, ff), dtype),
+        "w_up": dense_init(ks[2], (e, d_model, ff), dtype),
+        "w_down": dense_init(ks[3], (e, ff, d_model), dtype),
+    }
+    if cfg.n_shared:
+        p["shared_gate"] = dense_init(ks[4], (d_model, ff * cfg.n_shared),
+                                      dtype)
+        p["shared_up"] = dense_init(ks[4], (d_model, ff * cfg.n_shared),
+                                    dtype)
+        p["shared_down"] = dense_init(ks[4], (ff * cfg.n_shared, d_model),
+                                      dtype)
+    return p
+
+
+def moe_block(params: dict, x: jax.Array, cfg: MoEConfig
+              ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss)."""
+    b, s, d = x.shape
+    tokens = x.reshape(b * s, d)
+    t = tokens.shape[0]
+    gs = min(cfg.group_size, t)
+    while t % gs:
+        gs //= 2
+    g = t // gs
+    tg = tokens.reshape(g, gs, d)                         # (G, Tg, d)
+    tg_per = gs
+    cap = max(int(tg_per * cfg.top_k / cfg.n_experts * cfg.capacity_factor),
+              cfg.top_k)
+
+    logits = jnp.einsum("gtd,de->gte", tg.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)               # (G, Tg, E)
+    topv, topi = jax.lax.top_k(probs, cfg.top_k)          # (G, Tg, K)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+
+    # Switch aux loss: fraction-of-tokens x mean router prob per expert.
+    frac = jnp.mean(
+        jax.nn.one_hot(topi[..., 0], cfg.n_experts), axis=(0, 1))
+    aux = cfg.n_experts * jnp.sum(frac * jnp.mean(probs, axis=(0, 1)))
+
+    # Capacity positions: cumulative count of each expert along the group.
+    onehot = jax.nn.one_hot(topi, cfg.n_experts, dtype=jnp.int32)  # (G,Tg,K,E)
+    flatoh = onehot.reshape(g, tg_per * cfg.top_k, cfg.n_experts)
+    pos = jnp.cumsum(flatoh, axis=1) - 1                  # position per slot
+    pos = pos.reshape(g, tg_per, cfg.top_k, cfg.n_experts)
+    slot = jnp.sum(pos * onehot, axis=-1)                 # (G, Tg, K)
+    keep = slot < cap
+    gate = topv * keep
+
+    # Dispatch tensor (G, Tg, E, C) — the GShard one-hot pair.
+    disp = (jax.nn.one_hot(topi, cfg.n_experts, dtype=x.dtype)[..., None]
+            * jax.nn.one_hot(jnp.where(keep, slot, cap), cap + 1,
+                             dtype=x.dtype)[..., :cap][..., None, :])
+    disp = jnp.sum(disp, axis=2)                          # (G, Tg, E, C)
+    expert_in = jnp.einsum("gtec,gtd->egcd", disp, tg)    # (E, G, C, d)
+
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", expert_in,
+                               params["w_gate"])) * jnp.einsum(
+        "egcd,edf->egcf", expert_in, params["w_up"])
+    expert_out = jnp.einsum("egcf,efd->egcd", h, params["w_down"])
+
+    combine = (gate[..., None, None]
+               * jax.nn.one_hot(topi, cfg.n_experts, dtype=x.dtype)[..., None]
+               * jax.nn.one_hot(jnp.where(keep, slot, cap), cap + 1,
+                                dtype=x.dtype)[..., :cap][..., None, :])
+    combine = jnp.sum(combine, axis=2).astype(x.dtype)    # (G, Tg, E, C)
+    out = jnp.einsum("gtec,egcd->gtd", combine, expert_out)
+
+    if "shared_gate" in params:
+        sh = jax.nn.silu(tg @ params["shared_gate"]) * (tg @ params["shared_up"])
+        out = out + sh @ params["shared_down"]
+
+    out = out.reshape(b, s, d)
+    if "moe_seq_combine" in cm.PERF_OPTS:
+        # §Perf: force the combine einsum's TP reduction to land directly
+        # in the SP (sequence-sharded) layout -> GSPMD emits reduce-scatter
+        # instead of all-reduce (1/16th the bytes on a 16-way model axis).
+        out = cm.constrain_acts(out)
+    return out, aux

@@ -1,0 +1,461 @@
+"""Config-driven decoder-only transformer LM.
+
+Covers the dense (qwen2/codeqwen/qwen1.5), sliding-window (gemma3),
+audio-token (musicgen), VLM-backbone (pixtral) and MoE (dbrx,
+deepseek-v2-lite w/ MLA) assigned architectures from one implementation.
+
+Structure decisions driven by the dry-run (512-device compile on 1 CPU):
+  * homogeneous layers are stacked (leading L axis) and scanned with
+    ``jax.lax.scan`` + ``jax.checkpoint`` — HLO size stays O(1) in depth;
+  * gemma3's 5:1 local:global pattern stacks layers as (groups, 6, ...) and
+    scans over groups with the 6-layer pattern unrolled in the body;
+  * deepseek's first dense layer is kept outside the MoE scan.
+
+Weights are 2-D sharded (TP feature axis x ZeRO-style data axis) per
+``repro.models.common`` — see DESIGN.md §Parallelism mapping.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+from repro.models.attention import attention, decode_attention
+from repro.models.common import dense_init, rms_norm, rope
+from repro.models.mla import (init_mla, mla_attention, mla_cache_shape,
+                              mla_decode)
+from repro.models.moe import init_moe, moe_block
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def _init_attn(key, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "w_q": dense_init(ks[0], (d, cfg.n_heads * hd), dtype),
+        "w_k": dense_init(ks[1], (d, cfg.n_kv_heads * hd), dtype),
+        "w_v": dense_init(ks[2], (d, cfg.n_kv_heads * hd), dtype),
+        "w_o": dense_init(ks[3], (cfg.n_heads * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["b_k"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["b_v"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    return p
+
+
+def _init_mlp(key, d: int, ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d, ff), dtype),
+        "w_up": dense_init(ks[1], (d, ff), dtype),
+        "w_down": dense_init(ks[2], (ff, d), dtype),
+    }
+
+
+def _init_layer(key, cfg: ArchConfig, dtype, *, moe_layer: bool,
+                dense_ff: int | None = None) -> dict:
+    ka, kf = jax.random.split(key)
+    p: dict = {
+        "ln_attn": jnp.zeros((cfg.d_model,), dtype),
+        "ln_mlp": jnp.zeros((cfg.d_model,), dtype),
+    }
+    p["attn"] = (init_mla(ka, cfg, dtype) if cfg.mla is not None
+                 else _init_attn(ka, cfg, dtype))
+    if moe_layer:
+        p["moe"] = init_moe(kf, cfg.d_model, cfg.moe, dtype)
+    else:
+        p["mlp"] = _init_mlp(kf, cfg.d_model, dense_ff or cfg.d_ff, dtype)
+    return p
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    dtype = cm.dtype_of(cfg)
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    params: dict = {
+        "embed": dense_init(k_embed, (cfg.vocab, cfg.d_model), dtype,
+                            scale=1.0),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, (cfg.d_model, cfg.vocab),
+                                       dtype)
+
+    n_scan = cfg.n_layers - cfg.n_dense_layers
+    keys = jax.random.split(k_layers, n_scan)
+    moe_layer = cfg.moe is not None
+    stacked = [
+        _init_layer(keys[i], cfg, dtype, moe_layer=moe_layer)
+        for i in range(n_scan)
+    ]
+    layers = jax.tree.map(lambda *xs: jnp.stack(xs), *stacked)
+    if cfg.local_per_global:
+        group = cfg.local_per_global + 1
+        assert n_scan % group == 0, (n_scan, group)
+        layers = jax.tree.map(
+            lambda x: x.reshape(n_scan // group, group, *x.shape[1:]),
+            layers)
+    params["layers"] = layers
+    if cfg.n_dense_layers:
+        kd = jax.random.split(k_layers, cfg.n_dense_layers + 1)[-1]
+        params["dense_layers"] = [
+            _init_layer(jax.random.fold_in(kd, i), cfg, dtype,
+                        moe_layer=False, dense_ff=cfg.dense_d_ff)
+            for i in range(cfg.n_dense_layers)
+        ]
+    return params
+
+
+def param_specs(cfg: ArchConfig) -> Any:
+    """PartitionSpec pytree matching ``init_params`` output."""
+    attn_spec = (
+        {
+            "w_q": cm.spec_in_proj(), "w_dkv": cm.spec_in_proj(),
+            "w_krope": P("data", None), "w_uk": P(None, "model"),
+            "w_uv": P(None, "model"), "w_o": cm.spec_out_proj(),
+        } if cfg.mla is not None else {
+            "w_q": cm.spec_in_proj(), "w_k": cm.spec_in_proj(),
+            "w_v": cm.spec_in_proj(), "w_o": cm.spec_out_proj(),
+            **({"b_q": P("model"), "b_k": P("model"), "b_v": P("model")}
+               if cfg.qkv_bias else {}),
+        })
+
+    def layer_spec(moe_layer: bool) -> dict:
+        p = {"ln_attn": P(), "ln_mlp": P(), "attn": attn_spec}
+        if moe_layer:
+            moe = {
+                "router": P("data", None),
+                "w_gate": cm.spec_expert_in(),
+                "w_up": cm.spec_expert_in(),
+                "w_down": cm.spec_expert_out(),
+            }
+            if cfg.moe.n_shared:
+                moe.update({"shared_gate": cm.spec_in_proj(),
+                            "shared_up": cm.spec_in_proj(),
+                            "shared_down": cm.spec_out_proj()})
+            p["moe"] = moe
+        else:
+            p["mlp"] = {"w_gate": cm.spec_in_proj(),
+                        "w_up": cm.spec_in_proj(),
+                        "w_down": cm.spec_out_proj()}
+        return p
+
+    n_stack_axes = 2 if cfg.local_per_global else 1
+    def stack(spec_tree):
+        return jax.tree.map(
+            lambda s: P(*([None] * n_stack_axes), *s), spec_tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+    specs: dict = {
+        "embed": cm.spec_embed(),
+        "final_norm": P(),
+        "layers": stack(layer_spec(cfg.moe is not None)),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P("data", "model")
+    if cfg.n_dense_layers:
+        specs["dense_layers"] = [layer_spec(False)
+                                 for _ in range(cfg.n_dense_layers)]
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _attn_forward(p, x, positions, cfg: ArchConfig, *, window,
+                  with_cache: bool = False):
+    if cfg.mla is not None:
+        return mla_attention(p, x, positions, cfg, with_cache=with_cache)
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["w_q"]
+    k = x @ p["w_k"]
+    v = x @ p["w_v"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["b_q"], k + p["b_k"], v + p["b_v"]
+    q = rope(q.reshape(b, s, cfg.n_heads, hd), positions, cfg.rope_theta)
+    k = rope(k.reshape(b, s, cfg.n_kv_heads, hd), positions, cfg.rope_theta)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    out = attention(q, k, v, window=window)
+    out = out.reshape(b, s, cfg.n_heads * hd) @ p["w_o"]
+    if with_cache:
+        return out, {"k": k, "v": v}
+    return out
+
+
+def _layer_forward(p, x, positions, cfg: ArchConfig, *, window,
+                   moe_layer: bool, with_cache: bool = False):
+    a = _attn_forward(p["attn"], rms_norm(x, p["ln_attn"], cfg.norm_eps),
+                      positions, cfg, window=window, with_cache=with_cache)
+    kv = None
+    if with_cache:
+        a, kv = a
+    h = x + a
+    y = rms_norm(h, p["ln_mlp"], cfg.norm_eps)
+    if moe_layer:
+        f, aux = moe_block(p["moe"], y, cfg.moe)
+    else:
+        m = p["mlp"]
+        f = (jax.nn.silu(y @ m["w_gate"]) * (y @ m["w_up"])) @ m["w_down"]
+        aux = jnp.zeros((), jnp.float32)
+    out = cm.constrain_acts(h + f)
+    if with_cache:
+        return out, aux, kv
+    return out, aux
+
+
+def _backbone(params, x, positions, cfg: ArchConfig):
+    """Embedded input -> final hidden states; returns (hidden, aux_loss)."""
+    moe_layer = cfg.moe is not None
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for p in params.get("dense_layers", []):
+        x, _ = _layer_forward(p, x, positions, cfg, window=None,
+                              moe_layer=False)
+
+    if cfg.local_per_global:
+        group = cfg.local_per_global + 1
+
+        @functools.partial(jax.checkpoint,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+        def gbody(carry, gp):
+            h, aux = carry
+            for i in range(group):
+                sub = jax.tree.map(lambda a: a[i], gp)
+                win = cfg.sliding_window if i < cfg.local_per_global else None
+                h, a = _layer_forward(sub, h, positions, cfg, window=win,
+                                      moe_layer=moe_layer)
+                aux = aux + a
+            return (h, aux), None
+
+        (x, aux_total), _ = jax.lax.scan(gbody, (x, aux_total),
+                                         params["layers"])
+    else:
+        @functools.partial(jax.checkpoint,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+        def body(carry, lp):
+            h, aux = carry
+            h, a = _layer_forward(lp, h, positions, cfg,
+                                  window=cfg.sliding_window or None,
+                                  moe_layer=moe_layer)
+            return (h, aux + a), None
+
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                         params["layers"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), aux_total
+
+
+def embed_input(params, inp, cfg: ArchConfig):
+    if cfg.input_mode == "embeds":
+        return inp.astype(cm.dtype_of(cfg))
+    return jnp.take(params["embed"], inp, axis=0)
+
+
+def unembed(params, h, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", h, params["embed"],
+                          preferred_element_type=jnp.float32)
+    return jnp.einsum("bsd,dv->bsv", h, params["lm_head"],
+                      preferred_element_type=jnp.float32)
+
+
+def forward_hidden(params, inp, cfg: ArchConfig):
+    """(B, S) tokens or (B, S, d) embeds -> final hidden states, aux."""
+    x = embed_input(params, inp, cfg)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    return _backbone(params, x, positions, cfg)
+
+
+def forward(params, inp, cfg: ArchConfig) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward: (B, S) tokens or (B, S, d) embeds -> logits."""
+    h, aux = forward_hidden(params, inp, cfg)
+    return unembed(params, h, cfg), aux
+
+
+def prefill_step(params, inp, cfg: ArchConfig):
+    """Forward that also materialises the KV cache (serving prefill)."""
+    x = embed_input(params, inp, cfg)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    moe_layer = cfg.moe is not None
+
+    dense_caches = []
+    for p in params.get("dense_layers", []):
+        x, _, kv = _layer_forward(p, x, positions, cfg, window=None,
+                                  moe_layer=False, with_cache=True)
+        dense_caches.append(kv)
+
+    if cfg.local_per_global:
+        group = cfg.local_per_global + 1
+
+        def gbody(h, gp):
+            kvs = []
+            for i in range(group):
+                sub = jax.tree.map(lambda a: a[i], gp)
+                win = cfg.sliding_window if i < cfg.local_per_global else None
+                h, _, kv = _layer_forward(sub, h, positions, cfg,
+                                          window=win, moe_layer=moe_layer,
+                                          with_cache=True)
+                kvs.append(kv)
+            return h, jax.tree.map(lambda *xs: jnp.stack(xs), *kvs)
+
+        x, cache = jax.lax.scan(gbody, x, params["layers"])
+    else:
+        def body(h, lp):
+            h, _, kv = _layer_forward(lp, h, positions, cfg,
+                                      window=cfg.sliding_window or None,
+                                      moe_layer=moe_layer, with_cache=True)
+            return h, kv
+
+        x, cache = jax.lax.scan(body, x, params["layers"])
+
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, h[:, -1:, :], cfg)
+    out = {"layers": cache}
+    if cfg.n_dense_layers:
+        out["dense_layers"] = dense_caches
+    return logits, out
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode path
+# ---------------------------------------------------------------------------
+
+def cache_shapes(cfg: ArchConfig, batch: int, seq: int):
+    """ShapeDtypeStruct pytree of the decode cache (stacked over layers)."""
+    dtype = cm.dtype_of(cfg)
+    n_scan = cfg.n_layers - cfg.n_dense_layers
+    if cfg.mla is not None:
+        per = mla_cache_shape(cfg, batch, seq, dtype)
+    else:
+        hd = cfg.resolved_head_dim
+        per = {
+            "k": jax.ShapeDtypeStruct((batch, seq, cfg.n_kv_heads, hd),
+                                      dtype),
+            "v": jax.ShapeDtypeStruct((batch, seq, cfg.n_kv_heads, hd),
+                                      dtype),
+        }
+    def stk(s):
+        if cfg.local_per_global:
+            group = cfg.local_per_global + 1
+            return jax.ShapeDtypeStruct(
+                (n_scan // group, group, *s.shape), s.dtype)
+        return jax.ShapeDtypeStruct((n_scan, *s.shape), s.dtype)
+    out = {"layers": jax.tree.map(stk, per)}
+    if cfg.n_dense_layers:
+        out["dense_layers"] = [per for _ in range(cfg.n_dense_layers)]
+    return out
+
+
+def cache_specs(cfg: ArchConfig) -> Any:
+    """Shard caches over batch (data) and kv-heads (model)."""
+    if cfg.mla is not None:
+        per = {"c_kv": P("data", None, "model"),
+               "k_rope": P("data", None, None, None)}
+    else:
+        per = {"k": P("data", None, "model", None),
+               "v": P("data", None, "model", None)}
+    n_axes = 2 if cfg.local_per_global else 1
+    stk = jax.tree.map(lambda s: P(*([None] * n_axes), *s), per,
+                       is_leaf=lambda x: isinstance(x, P))
+    out = {"layers": stk}
+    if cfg.n_dense_layers:
+        out["dense_layers"] = [per for _ in range(cfg.n_dense_layers)]
+    return out
+
+
+def _attn_decode(p, x, cache, cfg: ArchConfig, *, window):
+    """x: (B, 1, d); cache k/v: (B, S, KV, hd). Appends at position S-1."""
+    if cfg.mla is not None:
+        return mla_decode(p, x, cache, cfg)
+    b = x.shape[0]
+    sk = cache["k"].shape[1]
+    hd = cfg.resolved_head_dim
+    positions = jnp.full((b, 1), sk - 1, jnp.int32)
+    q = x @ p["w_q"]
+    k = x @ p["w_k"]
+    v = x @ p["w_v"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["b_q"], k + p["b_k"], v + p["b_v"]
+    q = rope(q.reshape(b, 1, cfg.n_heads, hd), positions, cfg.rope_theta)
+    k = rope(k.reshape(b, 1, cfg.n_kv_heads, hd), positions, cfg.rope_theta)
+    v = v.reshape(b, 1, cfg.n_kv_heads, hd)
+    kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, sk - 1, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, sk - 1, axis=1)
+    out = decode_attention(q, kc, vc, window=window)
+    out = out.reshape(b, 1, cfg.n_heads * hd) @ p["w_o"]
+    return out, {"k": kc, "v": vc}
+
+
+def _layer_decode(p, x, cache, cfg: ArchConfig, *, window, moe_layer):
+    a, cache = _attn_decode(p["attn"], rms_norm(x, p["ln_attn"],
+                                                cfg.norm_eps),
+                            cache, cfg, window=window)
+    h = x + a
+    y = rms_norm(h, p["ln_mlp"], cfg.norm_eps)
+    if moe_layer:
+        f, _ = moe_block(p["moe"], y, cfg.moe)
+    else:
+        m = p["mlp"]
+        f = (jax.nn.silu(y @ m["w_gate"]) * (y @ m["w_up"])) @ m["w_down"]
+    return h + f, cache
+
+
+def decode_step(params, cache, token, cfg: ArchConfig):
+    """One decode step: token (B, 1) (or (B, 1, d) embeds) -> logits, cache."""
+    x = embed_input(params, token, cfg)
+    moe_layer = cfg.moe is not None
+
+    new_dense = []
+    for p, c in zip(params.get("dense_layers", []),
+                    cache.get("dense_layers", [])):
+        x, c2 = _layer_decode(p, x, c, cfg, window=None, moe_layer=False)
+        new_dense.append(c2)
+
+    if cfg.local_per_global:
+        group = cfg.local_per_global + 1
+
+        def gbody(h, gp_and_cache):
+            gp, gc = gp_and_cache
+            new_c = []
+            for i in range(group):
+                sub = jax.tree.map(lambda a: a[i], gp)
+                subc = jax.tree.map(lambda a: a[i], gc)
+                win = cfg.sliding_window if i < cfg.local_per_global else None
+                h, c2 = _layer_decode(sub, h, subc, cfg, window=win,
+                                      moe_layer=moe_layer)
+                new_c.append(c2)
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_c)
+            return h, stacked
+
+        x, new_cache = jax.lax.scan(gbody, x,
+                                    (params["layers"], cache["layers"]))
+    else:
+        def body(h, lp_and_cache):
+            lp, lc = lp_and_cache
+            h, c2 = _layer_decode(lp, h, lc, cfg,
+                                  window=cfg.sliding_window or None,
+                                  moe_layer=moe_layer)
+            return h, c2
+
+        x, new_cache = jax.lax.scan(body, x,
+                                    (params["layers"], cache["layers"]))
+
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, h, cfg)
+    out_cache = {"layers": new_cache}
+    if cfg.n_dense_layers:
+        out_cache["dense_layers"] = new_dense
+    return logits, out_cache

@@ -1,0 +1,273 @@
+"""Zamba2 — Mamba2 backbone with a SHARED attention block [arXiv:2411.15242].
+
+One transformer block's weights are shared across all its application
+sites (every ``shared_attn_every`` SSM layers); each site gets its own
+input projection over concat(hidden, original_embedding) — the paper's
+parameter-efficient way to give an SSM stack periodic global attention.
+
+Layout: n_layers = head + n_sites * every  (e.g. 38 = 2 + 6*6).  The head
+layers run unrolled; then a scan over sites runs (``every`` mamba layers +
+the shared attention block).  Each site keeps its own KV cache.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+from repro.models.attention import attention, decode_attention
+from repro.models.common import dense_init, rms_norm, rope
+from repro.models.mamba2 import (init_mamba_block, mamba_block,
+                                 mamba_block_specs, mamba_cache_shapes,
+                                 mamba_cache_specs, mamba_decode)
+
+
+def _site_layout(cfg: ArchConfig) -> tuple[int, int]:
+    every = cfg.shared_attn_every
+    n_sites = cfg.n_layers // every
+    head = cfg.n_layers - n_sites * every
+    return head, n_sites
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    dtype = cm.dtype_of(cfg)
+    head, n_sites = _site_layout(cfg)
+    every = cfg.shared_attn_every
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 8)
+
+    mb_keys = jax.random.split(ks[0], cfg.n_layers)
+    blocks = [init_mamba_block(k, cfg, dtype) for k in mb_keys]
+    head_blocks = blocks[:head]
+    site_blocks = blocks[head:]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *site_blocks)
+    stacked = jax.tree.map(
+        lambda x: x.reshape(n_sites, every, *x.shape[1:]), stacked)
+
+    ka = jax.random.split(ks[1], 5)
+    shared_attn = {
+        "ln": jnp.zeros((2 * d,), dtype),
+        "w_q": dense_init(ka[0], (2 * d, cfg.n_heads * hd), dtype),
+        "w_k": dense_init(ka[1], (2 * d, cfg.n_kv_heads * hd), dtype),
+        "w_v": dense_init(ka[2], (2 * d, cfg.n_kv_heads * hd), dtype),
+        "w_o": dense_init(ka[3], (cfg.n_heads * hd, d), dtype),
+        "ln_mlp": jnp.zeros((d,), dtype),
+        "w_gate": dense_init(ka[4], (d, cfg.d_ff), dtype),
+        "w_up": dense_init(ka[4], (d, cfg.d_ff), dtype),
+        "w_down": dense_init(ka[4], (cfg.d_ff, d), dtype),
+    }
+    site_proj = dense_init(ks[2], (n_sites, d, d), dtype, scale=0.02)
+
+    return {
+        "embed": dense_init(ks[3], (cfg.vocab, cfg.d_model), dtype,
+                            scale=1.0),
+        "head_layers": [b for b in head_blocks],
+        "site_layers": stacked,
+        "shared_attn": shared_attn,
+        "site_proj": site_proj,                   # per-site output adapter
+        "final_norm": jnp.zeros((d,), dtype),
+        "lm_head": dense_init(ks[4], (d, cfg.vocab), dtype),
+    }
+
+
+def param_specs(cfg: ArchConfig):
+    head, n_sites = _site_layout(cfg)
+    block = mamba_block_specs(cfg)
+    return {
+        "embed": cm.spec_embed(),
+        "head_layers": [block for _ in range(head)],
+        "site_layers": jax.tree.map(lambda s: P(None, None, *s), block,
+                                    is_leaf=lambda x: isinstance(x, P)),
+        "shared_attn": {
+            "ln": P(), "w_q": cm.spec_in_proj(), "w_k": cm.spec_in_proj(),
+            "w_v": cm.spec_in_proj(), "w_o": cm.spec_out_proj(),
+            "ln_mlp": P(), "w_gate": cm.spec_in_proj(),
+            "w_up": cm.spec_in_proj(), "w_down": cm.spec_out_proj(),
+        },
+        "site_proj": P(None, "data", "model"),
+        "final_norm": P(),
+        "lm_head": P("data", "model"),
+    }
+
+
+def _shared_attn_forward(sp, proj, h, emb0, positions, cfg: ArchConfig):
+    """Shared block over concat(hidden, original embedding)."""
+    b, s, d = h.shape
+    hd = cfg.resolved_head_dim
+    xin = jnp.concatenate([h, emb0], axis=-1)
+    xin = rms_norm(xin, sp["ln"], cfg.norm_eps)
+    q = rope((xin @ sp["w_q"]).reshape(b, s, cfg.n_heads, hd), positions,
+             cfg.rope_theta)
+    k = rope((xin @ sp["w_k"]).reshape(b, s, cfg.n_kv_heads, hd), positions,
+             cfg.rope_theta)
+    v = (xin @ sp["w_v"]).reshape(b, s, cfg.n_kv_heads, hd)
+    a = attention(q, k, v).reshape(b, s, cfg.n_heads * hd)
+    h = h + (a @ sp["w_o"]) @ proj
+    y = rms_norm(h, sp["ln_mlp"], cfg.norm_eps)
+    return h + (jax.nn.silu(y @ sp["w_gate"]) * (y @ sp["w_up"])) @ sp["w_down"]
+
+
+def forward_hidden(params, tokens, cfg: ArchConfig):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    emb0 = x
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    for blk in params["head_layers"]:
+        x = mamba_block(blk, x, cfg)
+
+    every = cfg.shared_attn_every
+    sp = params["shared_attn"]
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def site_body(h, site):
+        blocks, proj = site
+        for i in range(every):
+            h = mamba_block(jax.tree.map(lambda a: a[i], blocks), h, cfg)
+        h = _shared_attn_forward(sp, proj, h, emb0, positions, cfg)
+        return h, None
+
+    x, _ = jax.lax.scan(site_body, x,
+                        (params["site_layers"], params["site_proj"]))
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), \
+        jnp.zeros((), jnp.float32)
+
+
+def unembed(params, h, cfg: ArchConfig):
+    return jnp.einsum("bsd,dv->bsv", h, params["lm_head"],
+                      preferred_element_type=jnp.float32)
+
+
+def forward(params, tokens, cfg: ArchConfig):
+    h, aux = forward_hidden(params, tokens, cfg)
+    return unembed(params, h, cfg), aux
+
+
+def prefill_step(params, tokens, cfg: ArchConfig):
+    """Forward collecting SSM states + per-site KV caches."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    emb0 = x
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    every = cfg.shared_attn_every
+    sp = params["shared_attn"]
+    hd = cfg.resolved_head_dim
+
+    head_caches = []
+    for blk in params["head_layers"]:
+        x, (conv_tail, state) = mamba_block(blk, x, cfg, return_state=True)
+        head_caches.append({"conv": conv_tail, "state": state})
+
+    def site_body(h, site):
+        blocks, proj = site
+        mcs = []
+        for i in range(every):
+            h, (ct, st) = mamba_block(jax.tree.map(lambda a: a[i], blocks),
+                                      h, cfg, return_state=True)
+            mcs.append({"conv": ct, "state": st})
+        xin = jnp.concatenate([h, emb0], axis=-1)
+        xin = rms_norm(xin, sp["ln"], cfg.norm_eps)
+        q = rope((xin @ sp["w_q"]).reshape(b, s, cfg.n_heads, hd),
+                 positions, cfg.rope_theta)
+        k = rope((xin @ sp["w_k"]).reshape(b, s, cfg.n_kv_heads, hd),
+                 positions, cfg.rope_theta)
+        v = (xin @ sp["w_v"]).reshape(b, s, cfg.n_kv_heads, hd)
+        a = attention(q, k, v).reshape(b, s, cfg.n_heads * hd)
+        h = h + (a @ sp["w_o"]) @ proj
+        y = rms_norm(h, sp["ln_mlp"], cfg.norm_eps)
+        h = h + (jax.nn.silu(y @ sp["w_gate"])
+                 * (y @ sp["w_up"])) @ sp["w_down"]
+        return h, (jax.tree.map(lambda *xs: jnp.stack(xs), *mcs), k, v)
+
+    x, (site_mc, ks_, vs_) = jax.lax.scan(
+        site_body, x, (params["site_layers"], params["site_proj"]))
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h[:, -1:, :], params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    return logits, {"head": head_caches, "sites_mamba": site_mc,
+                    "attn_k": ks_, "attn_v": vs_}
+
+
+def cache_shapes(cfg: ArchConfig, batch: int, seq: int):
+    head, n_sites = _site_layout(cfg)
+    every = cfg.shared_attn_every
+    per_mamba = mamba_cache_shapes(cfg, batch)
+    hd = cfg.resolved_head_dim
+    dtype = cm.dtype_of(cfg)
+    kv = jax.ShapeDtypeStruct((n_sites, batch, seq, cfg.n_kv_heads, hd),
+                              dtype)
+    return {
+        "head": [per_mamba for _ in range(head)],
+        "sites_mamba": jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_sites, every, *s.shape),
+                                           s.dtype), per_mamba),
+        "attn_k": kv, "attn_v": kv,
+    }
+
+
+def cache_specs(cfg: ArchConfig):
+    per = mamba_cache_specs(cfg)
+    head, _ = _site_layout(cfg)
+    kv_spec = P(None, "data", None, "model", None)
+    return {
+        "head": [per for _ in range(head)],
+        "sites_mamba": jax.tree.map(lambda s: P(None, None, *s), per,
+                                    is_leaf=lambda x: isinstance(x, P)),
+        "attn_k": kv_spec, "attn_v": kv_spec,
+    }
+
+
+def decode_step(params, cache, token, cfg: ArchConfig):
+    x = jnp.take(params["embed"], token, axis=0)
+    emb0 = x
+    b = x.shape[0]
+    sk = cache["attn_k"].shape[2]
+    positions = jnp.full((b, 1), sk - 1, jnp.int32)
+    every = cfg.shared_attn_every
+    sp = params["shared_attn"]
+    hd = cfg.resolved_head_dim
+
+    new_head = []
+    for blk, c in zip(params["head_layers"], cache["head"]):
+        x, c2 = mamba_decode(blk, x, c, cfg)
+        new_head.append(c2)
+
+    def site_body(h, site):
+        blocks, proj, mcache, kc, vc = site
+        new_mc = []
+        for i in range(every):
+            h, c2 = mamba_decode(jax.tree.map(lambda a: a[i], blocks), h,
+                                 jax.tree.map(lambda a: a[i], mcache), cfg)
+            new_mc.append(c2)
+        xin = jnp.concatenate([h, emb0], axis=-1)
+        xin = rms_norm(xin, sp["ln"], cfg.norm_eps)
+        q = rope((xin @ sp["w_q"]).reshape(b, 1, cfg.n_heads, hd),
+                 positions, cfg.rope_theta)
+        k = rope((xin @ sp["w_k"]).reshape(b, 1, cfg.n_kv_heads, hd),
+                 positions, cfg.rope_theta)
+        v = (xin @ sp["w_v"]).reshape(b, 1, cfg.n_kv_heads, hd)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, sk - 1, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, sk - 1, axis=1)
+        a = decode_attention(q, kc, vc).reshape(b, 1, cfg.n_heads * hd)
+        h = h + (a @ sp["w_o"]) @ proj
+        y = rms_norm(h, sp["ln_mlp"], cfg.norm_eps)
+        h = h + (jax.nn.silu(y @ sp["w_gate"])
+                 * (y @ sp["w_up"])) @ sp["w_down"]
+        stacked_mc = jax.tree.map(lambda *xs: jnp.stack(xs), *new_mc)
+        return h, (stacked_mc, kc, vc)
+
+    x, (new_sites, new_k, new_v) = jax.lax.scan(
+        site_body, x,
+        (params["site_layers"], params["site_proj"],
+         cache["sites_mamba"], cache["attn_k"], cache["attn_v"]))
+
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    return logits, {"head": new_head, "sites_mamba": new_sites,
+                    "attn_k": new_k, "attn_v": new_v}

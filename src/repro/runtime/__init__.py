@@ -1,0 +1,6 @@
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.fault import FaultTolerantDriver, SimulatedFailure
+from repro.runtime.elastic import elastic_remesh_plan
+
+__all__ = ["CheckpointManager", "FaultTolerantDriver", "SimulatedFailure",
+           "elastic_remesh_plan"]

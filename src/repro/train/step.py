@@ -1,0 +1,96 @@
+"""The jitted training step: loss, grads, AdamW, with microbatching.
+
+DVFS integration (the paper's technique as a first-class feature): the
+launcher wraps this step with a clock plan from
+``repro.core.scheduler.DVFSScheduler`` — the step's roofline profile
+(from the dry-run artifact) decides the energy-optimal clock, and the
+runtime locks/unlocks around dispatch exactly like the paper's Sec. 5.3
+NVML calls around the cuFFT invocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.api import Model
+from repro.models.common import chunked_cross_entropy
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: AdamWState
+    step: jax.Array
+
+
+def init_train_state(model: Model, rng) -> TrainState:
+    params = model.init(rng)
+    return TrainState(params=params, opt=adamw_init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def train_state_specs(model: Model):
+    from jax.sharding import PartitionSpec as P
+    from repro.optim.adamw import optimizer_specs
+    ps = model.param_specs()
+    return TrainState(params=ps, opt=optimizer_specs(ps), step=P())
+
+
+def make_train_step(model: Model, *, microbatches: int = 1,
+                    aux_weight: float = 0.01,
+                    peak_lr: float = 3e-4) -> Callable:
+    """Build the jittable train_step(state, inputs, labels) -> (state, metrics).
+
+    ``microbatches`` > 1 accumulates gradients over sequential microbatches
+    (lax.scan) — activation memory drops by the factor, HBM traffic for
+    weights repeats per microbatch: the classic trade the §Perf iterations
+    measure.
+    """
+    cfg = model.cfg
+
+    def loss_fn(params, inp, labels):
+        hidden, aux = model.forward_hidden(params, inp)
+        ce = chunked_cross_entropy(
+            lambda h: model.unembed(params, h), hidden, labels)
+        return ce + aux_weight * aux
+
+    def train_step(state: TrainState, inp, labels):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, inp,
+                                                      labels)
+        else:
+            mb_inp = inp.reshape(microbatches, inp.shape[0] // microbatches,
+                                 *inp.shape[1:])
+            mb_lab = labels.reshape(microbatches,
+                                    labels.shape[0] // microbatches,
+                                    *labels.shape[1:])
+
+            def mb_body(acc, mb):
+                i, l = mb
+                loss, grads = jax.value_and_grad(loss_fn)(state.params, i, l)
+                return (acc[0] + loss,
+                        jax.tree.map(jnp.add, acc[1], grads)), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                state.params)
+            (loss, grads), _ = jax.lax.scan(mb_body, (0.0, zero),
+                                            (mb_inp, mb_lab))
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+        lr = cosine_schedule(state.opt.step, peak_lr=peak_lr)
+        new_params, new_opt, gnorm = adamw_update(state.params, grads,
+                                                  state.opt, lr=lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return TrainState(params=new_params, opt=new_opt,
+                          step=state.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,36 @@
+"""Dry-run integration: one real cell lowered+compiled in a subprocess
+with 512 forced host devices (the production-mesh contract)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mp", [False, True])
+def test_dryrun_smallest_cell(tmp_path, mp):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", "qwen2-0.5b", "--shape", "train_4k",
+           "--out", str(tmp_path)]
+    if mp:
+        cmd.append("--multi-pod")
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    tag = f"qwen2-0.5b__train_4k__{'2x16x16' if mp else '16x16'}"
+    with open(tmp_path / f"{tag}.json") as f:
+        art = json.load(f)
+    assert art["chips"] == (512 if mp else 256)
+    assert art["memory"]["fits_16gb"]
+    assert art["flops_per_device"] > 1e12
+    # multi-pod must produce cross-pod collectives (gradient all-reduce)
+    assert art["collective_bytes_per_device"] > 0
+    # useful-compute accounting is sane: HLO flops >= model flops and
+    # within ~4x (remat + attention overhead)
+    total_hlo = art["flops_per_device"] * art["chips"]
+    assert 0.9 * art["model_flops"] <= total_hlo <= 6 * art["model_flops"]

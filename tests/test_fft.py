@@ -1,0 +1,173 @@
+"""FFT substrate correctness: Stockham/Bluestein/four-step vs jnp.fft."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.fft import bluestein_fft, fft, fft2, ifft, plan_for_length
+from repro.fft.plan import four_step_fft
+from repro.fft.pipeline import (PipelineShape, candidate_snr, harmonic_sum,
+                                power_spectrum, pulsar_pipeline,
+                                spectrum_stats, stage_profiles)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rand_complex(shape, key=KEY, dtype=jnp.complex64):
+    kr, ki = jax.random.split(key)
+    return (jax.random.normal(kr, shape) +
+            1j * jax.random.normal(ki, shape)).astype(dtype)
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 32, 128, 1024, 4096])
+@pytest.mark.parametrize("batch", [(), (3,), (2, 5)])
+def test_stockham_matches_reference(n, batch):
+    x = rand_complex((*batch, n))
+    np.testing.assert_allclose(fft(x), jnp.fft.fft(x), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("n", [8, 256, 2048])
+def test_ifft_inverts(n):
+    x = rand_complex((4, n))
+    np.testing.assert_allclose(ifft(fft(x)), x, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("n", [3, 12, 100, 139, 139 * 139 // 139, 2187, 2401])
+def test_bluestein_matches_reference(n):
+    x = rand_complex((2, n))
+    np.testing.assert_allclose(bluestein_fft(x), jnp.fft.fft(x),
+                               rtol=3e-3, atol=3e-3)
+
+
+@pytest.mark.parametrize("n1,n2", [(4, 8), (32, 32), (64, 128)])
+def test_four_step_matches_reference(n1, n2):
+    x = rand_complex((2, n1 * n2))
+    np.testing.assert_allclose(four_step_fft(x, n1, n2), jnp.fft.fft(x),
+                               rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("n", [64, 8192, 2**15, 139, 100])
+def test_planner_dispatch_and_correctness(n):
+    plan = plan_for_length(n)
+    expected = {True: "stockham" if n <= 2**13 else "four-step",
+                False: "bluestein"}[(n & (n - 1)) == 0]
+    assert plan.algorithm == expected
+    assert plan.passes >= 1
+    x = rand_complex((2, n))
+    np.testing.assert_allclose(plan(x), jnp.fft.fft(x), rtol=3e-3, atol=3e-3)
+
+
+def test_fft2_matches_reference():
+    x = rand_complex((3, 16, 32))
+    np.testing.assert_allclose(fft2(x), jnp.fft.fft2(x), rtol=3e-4, atol=3e-4)
+
+
+def test_fft_axis_argument():
+    x = rand_complex((8, 5))
+    np.testing.assert_allclose(fft(x, axis=0), jnp.fft.fft(x, axis=0),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_float64_precision_path():
+    with jax.experimental.enable_x64():
+        x = rand_complex((2, 512), dtype=jnp.complex128)
+        np.testing.assert_allclose(fft(x), jnp.fft.fft(x), rtol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# Property-based invariants (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=20)
+@given(logn=st.integers(3, 10), seed=st.integers(0, 2**31 - 1))
+def test_property_parseval(logn, seed):
+    """sum |x|^2 == sum |X|^2 / N (energy conservation)."""
+    n = 2**logn
+    x = rand_complex((n,), key=jax.random.PRNGKey(seed))
+    X = fft(x)
+    np.testing.assert_allclose(jnp.sum(jnp.abs(x) ** 2),
+                               jnp.sum(jnp.abs(X) ** 2) / n, rtol=1e-3)
+
+
+@settings(deadline=None, max_examples=20)
+@given(logn=st.integers(2, 9), seed=st.integers(0, 2**31 - 1),
+       a=st.floats(-3, 3), b=st.floats(-3, 3))
+def test_property_linearity(logn, seed, a, b):
+    n = 2**logn
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x, y = rand_complex((n,), k1), rand_complex((n,), k2)
+    np.testing.assert_allclose(fft(a * x + b * y), a * fft(x) + b * fft(y),
+                               rtol=2e-3, atol=2e-3)
+
+
+@settings(deadline=None, max_examples=10)
+@given(logn=st.integers(3, 8), shift=st.integers(1, 7))
+def test_property_time_shift(logn, shift):
+    """Circular time shift <-> linear phase in frequency."""
+    n = 2**logn
+    x = rand_complex((n,))
+    X = fft(x)
+    Xs = fft(jnp.roll(x, -shift))
+    phase = jnp.exp(2j * jnp.pi * shift * jnp.arange(n) / n)
+    np.testing.assert_allclose(Xs, X * phase, rtol=2e-3, atol=2e-3)
+
+
+@settings(deadline=None, max_examples=10)
+@given(logn=st.integers(4, 10), seed=st.integers(0, 2**31 - 1))
+def test_property_impulse_is_flat(logn, seed):
+    """FFT of a delta is a flat spectrum (magnitude 1 everywhere)."""
+    n = 2**logn
+    pos = seed % n
+    x = jnp.zeros(n, jnp.complex64).at[pos].set(1.0)
+    np.testing.assert_allclose(jnp.abs(fft(x)), jnp.ones(n), rtol=1e-4,
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Pulsar pipeline
+# ---------------------------------------------------------------------------
+
+def test_power_spectrum_and_stats():
+    x = rand_complex((3, 256))
+    X = fft(x)
+    p = power_spectrum(X)
+    assert p.shape == (3, 256)
+    assert bool(jnp.all(p >= 0))
+    mean, std = spectrum_stats(p)
+    assert mean.shape == (3, 1) and std.shape == (3, 1)
+
+
+def test_harmonic_sum_levels():
+    p = jnp.ones((2, 128))
+    hs = harmonic_sum(p, 8)
+    assert hs.shape == (2, 4, 128)        # h = 1, 2, 4, 8
+    # On a flat spectrum (away from the clipped tail) S_h = h.
+    np.testing.assert_allclose(hs[:, 0, 1:16], 1.0)
+    np.testing.assert_allclose(hs[:, 3, 1:16], 8.0)
+
+
+def test_pipeline_finds_injected_pulsar():
+    """A periodic signal must produce a high-S/N candidate at its bin."""
+    n = 4096
+    t = jnp.arange(n, dtype=jnp.float32)
+    f0 = 128 / n                               # bin 128 fundamental
+    key = jax.random.PRNGKey(1)
+    noise = jax.random.normal(key, (1, n))
+    # A pulse train has power in the fundamental AND its harmonics.
+    signal = (jnp.sin(2 * jnp.pi * f0 * t) > 0.95).astype(jnp.float32)
+    x = noise + 4.0 * signal[None, :]
+    snr = pulsar_pipeline(x, n_harmonics=8)
+    assert snr.shape == (1, 4, n)
+    assert float(snr[0, :, 128].max()) > 8.0   # strong detection
+    # and harmonic summing must help for a pulse train:
+    assert float(snr[0, 1:, 128].max()) >= float(snr[0, 0, 128]) - 1.0
+
+
+def test_stage_profiles_fft_dominant_share():
+    """Sec. 5.3: with 2 harmonics the FFT is ~60% of pipeline time."""
+    from repro.core.hardware import TESLA_V100
+    from repro.fft.pipeline import fft_time_share
+    share = fft_time_share(PipelineShape(batch=32, n=2**20, n_harmonics=2),
+                           TESLA_V100)
+    assert 0.35 <= share <= 0.85

@@ -1,0 +1,148 @@
+"""Launch + analysis layer tests: spec fixing, HLO cost model, roofline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis.hlo import analyze_hlo
+from repro.analysis.roofline import RooflineTerms, model_flops_for
+from repro.configs import ARCHS, get_shape
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # single-device "mesh" shaped (1, 1) still exercises the spec logic
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+class FakeMesh:
+    """Axis-size-only stand-in so divisibility logic can test 16x16."""
+    def __init__(self, shape): self.shape = shape
+    @property
+    def axis_names(self): return tuple(self.shape)
+
+
+class TestFixSharding:
+    def setup_method(self):
+        from repro.launch.specs import fix_sharding
+        self.fix = fix_sharding
+        self.mesh = FakeMesh({"data": 16, "model": 16})
+
+    def test_divisible_kept(self):
+        assert self.fix((64, 32), P("data", "model"), self.mesh) \
+            == P("data", "model")
+
+    def test_small_dim_axis_moves_to_seq(self):
+        # kv=2 cannot take the 16-way model axis; seq (32768) absorbs it
+        got = self.fix((24, 128, 32768, 2, 64),
+                       P(None, "data", None, "model", None), self.mesh)
+        assert got == P(None, "data", "model")
+
+    def test_uneven_vocab_moved(self):
+        # 50280 % 16 != 0 -> model axis moves to the d dim (1024 % 256 == 0)
+        got = self.fix((50280, 1024), P("model", "data"), self.mesh)
+        assert got == P(None, ("data", "model"))
+
+    def test_batch_one_dropped(self):
+        got = self.fix((1, 524288, 64), P("data", None, "model"),
+                       self.mesh)
+        # batch axis cannot shard dim of size 1; moved to seq
+        assert got[0] is None or got[0] == ()
+
+    def test_axis_never_duplicated(self):
+        got = self.fix((16, 16), P(("data", "model"), "model"), self.mesh)
+        flat = []
+        for e in got:
+            if e is None:
+                continue
+            flat.extend([e] if isinstance(e, str) else list(e))
+        assert len(flat) == len(set(flat))
+
+
+class TestHloAnalyzer:
+    def test_scan_trip_count_multiplication(self):
+        w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+        xs = jax.ShapeDtypeStruct((24, 8, 32), jnp.float32)
+
+        def f(xs, w):
+            def body(c, x):
+                return c @ w + x @ w, None
+            out, _ = jax.lax.scan(body, xs[0], xs)
+            return out
+
+        compiled = jax.jit(f).lower(xs, w).compile()
+        a = analyze_hlo(compiled.as_text())
+        want = 24 * 2 * 2 * 8 * 32 * 32          # 24 iters x 2 dots
+        assert a["flops"] == pytest.approx(want, rel=0.01)
+
+    def test_collectives_counted(self):
+        # without collectives -> zero
+        f = jax.jit(lambda x: x @ x)
+        compiled = f.lower(jax.ShapeDtypeStruct((64, 64),
+                                                jnp.float32)).compile()
+        a = analyze_hlo(compiled.as_text())
+        assert a["collective_bytes"] == 0.0
+        assert a["flops"] == pytest.approx(2 * 64**3, rel=0.01)
+
+    def test_bytes_positive(self):
+        f = jax.jit(lambda x: jnp.sum(x * 2.0))
+        compiled = f.lower(jax.ShapeDtypeStruct((1024,),
+                                                jnp.float32)).compile()
+        a = analyze_hlo(compiled.as_text())
+        assert a["bytes"] >= 1024 * 4
+
+
+class TestRoofline:
+    def test_terms_and_bound(self):
+        t = RooflineTerms(
+            arch="x", shape="train_4k", mesh="16x16", chips=256,
+            hlo_flops=1.97e14,            # exactly 1 s of compute
+            hbm_bytes=819e9 * 0.5,        # 0.5 s of memory
+            collective_bytes=50e9 * 0.25, # 0.25 s of collective
+            model_flops=1.97e14 * 256 * 0.5,
+        )
+        assert t.compute_s == pytest.approx(1.0)
+        assert t.memory_s == pytest.approx(0.5)
+        assert t.collective_s == pytest.approx(0.25)
+        assert t.bound == "compute"
+        assert t.useful_ratio == pytest.approx(0.5)
+        assert t.roofline_fraction == pytest.approx(0.5)
+
+    def test_model_flops_train_vs_decode(self):
+        cfg = ARCHS["qwen2-0.5b"]
+        tr = model_flops_for(cfg, get_shape("train_4k"))
+        de = model_flops_for(cfg, get_shape("decode_32k"))
+        n = cfg.param_count()
+        assert tr == pytest.approx(6 * n * 256 * 4096)
+        assert de == pytest.approx(2 * n * 128)
+
+    def test_moe_uses_active_params(self):
+        cfg = ARCHS["dbrx-132b"]
+        assert cfg.active_param_count() < 0.45 * cfg.param_count()
+        tr = model_flops_for(cfg, get_shape("train_4k"))
+        assert tr == pytest.approx(6 * cfg.active_param_count() * 256 * 4096)
+
+
+class TestMeshAndSpecs:
+    def test_mesh_shapes(self):
+        # make_mesh(512 devices) only works in the dryrun env; check the
+        # shape arithmetic instead.
+        from repro.launch.mesh import make_production_mesh
+        n = jax.device_count()
+        if n == 512:
+            m = make_production_mesh(multi_pod=True)
+            assert m.devices.shape == (2, 16, 16)
+
+    def test_param_count_sanity(self):
+        """Published parameter counts within ~20% for named archs."""
+        approx = {
+            "qwen2-0.5b": 0.5e9, "codeqwen1.5-7b": 7.3e9,
+            "qwen1.5-4b": 4e9, "gemma3-12b": 12e9,
+            "musicgen-medium": 1.5e9, "dbrx-132b": 132e9,
+            "deepseek-v2-lite-16b": 16e9, "mamba2-370m": 0.37e9,
+            "pixtral-12b": 12e9, "zamba2-1.2b": 1.2e9,
+        }
+        for name, want in approx.items():
+            got = ARCHS[name].param_count()
+            assert 0.6 * want < got < 1.6 * want, (name, got, want)

@@ -1,0 +1,119 @@
+"""Per-architecture smoke tests: reduced config, one forward/train/decode
+step on CPU, asserting output shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import build_model
+
+BATCH, SEQ = 2, 32
+
+
+def _inputs(cfg, batch=BATCH, seq=SEQ):
+    if cfg.input_mode == "embeds":
+        return jax.random.normal(jax.random.PRNGKey(1),
+                                 (batch, seq, cfg.d_model), jnp.float32)
+    return jax.random.randint(jax.random.PRNGKey(1), (batch, seq), 0,
+                              cfg.vocab)
+
+
+@pytest.fixture(scope="module", params=sorted(ARCHS))
+def arch_setup(request):
+    cfg = ARCHS[request.param].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+class TestSmoke:
+    def test_forward_shapes_and_finite(self, arch_setup):
+        cfg, model, params = arch_setup
+        logits, aux = model.forward(params, _inputs(cfg))
+        assert logits.shape == (BATCH, SEQ, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+        assert bool(jnp.isfinite(aux))
+
+    def test_train_step_reduces_loss(self, arch_setup):
+        """One SGD step on a repeated batch must not blow up (and usually
+        reduces the loss)."""
+        from repro.models.common import cross_entropy
+        cfg, model, params = arch_setup
+        inp = _inputs(cfg)
+        labels = jax.random.randint(jax.random.PRNGKey(2), (BATCH, SEQ), 0,
+                                    cfg.vocab)
+
+        def loss_fn(p):
+            logits, aux = model.forward(p, inp)
+            return cross_entropy(logits, labels) + 0.01 * aux
+
+        l0, grads = jax.value_and_grad(loss_fn)(params)
+        assert np.isfinite(l0)
+        flat = jax.tree.leaves(grads)
+        assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat)
+        params2 = jax.tree.map(lambda p, g: p - 0.3 * g.astype(p.dtype),
+                               params, grads)
+        l1 = loss_fn(params2)
+        assert np.isfinite(l1)
+        assert l1 < l0 + 0.5          # no explosion; usually decreases
+
+    def test_decode_step(self, arch_setup):
+        cfg, model, params = arch_setup
+        cache_sds = model.cache_shapes(BATCH, SEQ)
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                             cache_sds)
+        if cfg.input_mode == "embeds":
+            tok = jax.random.normal(jax.random.PRNGKey(3),
+                                    (BATCH, 1, cfg.d_model), jnp.float32)
+        else:
+            tok = jax.random.randint(jax.random.PRNGKey(3), (BATCH, 1), 0,
+                                     cfg.vocab)
+        logits, new_cache = model.decode(params, cache, tok)
+        assert logits.shape == (BATCH, 1, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+        # cache structure preserved
+        assert (jax.tree.structure(new_cache)
+                == jax.tree.structure(cache))
+
+    def test_prefill_matches_cache_shapes(self, arch_setup):
+        cfg, model, params = arch_setup
+        logits, cache = model.prefill(params, _inputs(cfg))
+        assert logits.shape == (BATCH, 1, cfg.vocab)
+        sds = model.cache_shapes(BATCH, SEQ)
+        got = jax.tree.map(lambda a: a.shape, cache)
+        want = jax.tree.map(lambda s: s.shape, sds)
+        # SSM conv caches are (W-1)-long regardless of seq; compare
+        # structure and let shapes match where defined.
+        assert jax.tree.structure(got) == jax.tree.structure(want)
+
+    def test_param_spec_tree_matches_params(self, arch_setup):
+        cfg, model, params = arch_setup
+        specs = model.param_specs()
+        from jax.sharding import PartitionSpec
+        jax.tree.map(lambda p, s: None, params, specs,
+                     is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+class TestDecodeConsistency:
+    """Decode with a prefilled cache must reproduce forward() logits."""
+
+    @pytest.mark.parametrize("name", ["qwen2-0.5b", "mamba2-370m"])
+    def test_decode_matches_forward(self, name):
+        cfg = ARCHS[name].reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
+                                  cfg.vocab)
+        logits_full, _ = model.forward(params, toks)
+        # prefill on the first 7 tokens, decode token 8 at position 7
+        _, cache = model.prefill(params, toks[:, :7])
+        if name == "qwen2-0.5b":
+            # pad kv cache to length 8 (decode writes at S-1 = 7)
+            cache = jax.tree.map(
+                lambda a: jnp.pad(a, [(0, 0)] * 2 + [(0, 1)] + [(0, 0)] * 2)
+                if a.ndim == 5 else a, cache)
+        logits_dec, _ = model.decode(params, cache, toks[:, 7:8])
+        np.testing.assert_allclose(
+            np.asarray(logits_dec[0, 0]), np.asarray(logits_full[0, 7]),
+            rtol=2e-2, atol=2e-2)

@@ -1,0 +1,114 @@
+"""Property-based tests (hypothesis) for system invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.core.dvfs import sweep
+from repro.core.hardware import TESLA_V100, TPU_V5E
+from repro.core.perf_model import WorkloadProfile
+from repro.core.power_model import PowerModel
+
+
+class FakeMesh:
+    def __init__(self, shape): self.shape = shape
+    @property
+    def axis_names(self): return tuple(self.shape)
+
+
+@settings(deadline=None, max_examples=60)
+@given(
+    dims=st.lists(st.integers(1, 2**20), min_size=1, max_size=5),
+    axes=st.lists(st.sampled_from([None, "data", "model",
+                                   ("data",), ("data", "model")]),
+                  min_size=0, max_size=5),
+)
+def test_property_fix_sharding_always_divisible(dims, axes):
+    """After fix_sharding, every sharded dim divides exactly and no mesh
+    axis appears twice."""
+    from repro.launch.specs import _axis_size, fix_sharding
+    mesh = FakeMesh({"data": 16, "model": 16})
+    # drop duplicate axis uses in the input (invalid spec otherwise)
+    seen = set()
+    clean = []
+    for e in axes[:len(dims)]:
+        tup = () if e is None else ((e,) if isinstance(e, str) else e)
+        if any(a in seen for a in tup):
+            clean.append(None)
+        else:
+            seen.update(tup)
+            clean.append(e)
+    spec = P(*clean)
+    fixed = fix_sharding(tuple(dims), spec, mesh)
+    used = []
+    for dim, entry in zip(dims, list(fixed) + [None] * len(dims)):
+        if entry is None:
+            continue
+        tup = (entry,) if isinstance(entry, str) else tuple(entry)
+        used.extend(tup)
+        assert dim % _axis_size(mesh, tup) == 0
+    assert len(used) == len(set(used))
+
+
+@settings(deadline=None, max_examples=50)
+@given(
+    t_mem=st.floats(1e-4, 1.0),
+    issue_frac=st.floats(0.0, 1.5),
+    cache_frac=st.floats(0.0, 1.5),
+    coll_frac=st.floats(0.0, 2.0),
+)
+def test_property_time_monotone_nonincreasing_in_frequency(
+        t_mem, issue_frac, cache_frac, coll_frac):
+    """t(f) never decreases when the clock drops beyond the contention
+    band, for ANY workload mix; and t(f) >= the flat (HBM/ICI) bound."""
+    prof = WorkloadProfile("w", t_mem=t_mem, t_issue=issue_frac * t_mem,
+                           t_cache=cache_frac * t_mem,
+                           t_coll=coll_frac * t_mem)
+    for dev in (TESLA_V100, TPU_V5E):
+        f = dev.frequencies()
+        t = prof.time(f, dev)
+        assert np.all(t >= max(t_mem, coll_frac * t_mem) * 0.999)
+        # below the voltage knee there is no contention relief: monotone
+        knee_mask = f / dev.f_max <= dev.f_vfloor_frac
+        tk = t[knee_mask]
+        assert np.all(np.diff(tk) >= -1e-12)
+
+
+@settings(deadline=None, max_examples=50)
+@given(
+    t_mem=st.floats(1e-4, 1.0),
+    issue_frac=st.floats(0.05, 1.2),
+)
+def test_property_optimal_energy_never_worse_than_boost(t_mem, issue_frac):
+    """The swept optimum can never consume more energy than boost, and
+    its frequency is on the device grid."""
+    prof = WorkloadProfile("w", t_mem=t_mem, t_issue=issue_frac * t_mem,
+                           flops=1e9)
+    for dev in (TESLA_V100, TPU_V5E):
+        res = sweep(prof, dev)
+        assert res.optimal.energy <= res.boost.energy * (1 + 1e-9)
+        assert any(abs(res.optimal.f - f) < 1e-6
+                   for f in dev.frequencies())
+
+
+@settings(deadline=None, max_examples=40)
+@given(u_core=st.floats(0.05, 1.0), u_mem=st.floats(0.0, 1.0))
+def test_property_power_bounded_by_tdp_and_positive(u_core, u_mem):
+    for dev in (TESLA_V100, TPU_V5E):
+        pm = PowerModel(dev)
+        p = pm.power(dev.frequencies(), u_core=u_core, u_mem=u_mem)
+        assert np.all(p > 0)
+        assert np.all(p <= dev.tdp * (1 + 1e-9))
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    budget=st.floats(0.0, 0.5),
+    issue_frac=st.floats(0.2, 1.2),
+)
+def test_property_time_budget_respected(budget, issue_frac):
+    """Sec. 2.3 real-time constraint: the constrained optimum never
+    exceeds the slowdown budget."""
+    prof = WorkloadProfile("w", t_mem=1e-2, t_issue=issue_frac * 1e-2)
+    res = sweep(prof, TPU_V5E, time_budget=budget)
+    assert res.slowdown <= budget + 1e-9
