@@ -17,6 +17,9 @@ figure's headline quantity).
   kernels               Pallas kernels (interpret) vs jnp oracle wall time
   roofline              the dry-run roofline table (artifacts)
   dvfs_cells            the paper's technique applied to every dry-run cell
+  serving               the energy-aware FFT service on a synthetic stream
+
+Usage: ``python benchmarks/run.py [target ...]`` — no arguments runs all.
 """
 from __future__ import annotations
 
@@ -24,6 +27,7 @@ import glob
 import json
 import math
 import os
+import sys
 import time
 
 import jax
@@ -280,16 +284,96 @@ def fft_pencil_roofline():
              f"fits={a['memory']['fits_16gb']}")
 
 
+def _synthetic_stream(rng, lengths, n_requests):
+    """A repeated-shape request stream: (payload, length) tuples."""
+    stream = []
+    for i in range(n_requests):
+        n = lengths[i % len(lengths)]
+        b = 1 + int(rng.integers(0, 4))
+        x = (rng.standard_normal((b, n))
+             + 1j * rng.standard_normal((b, n))).astype(np.complex64)
+        stream.append(x)
+    return stream
+
+
+def serving():
+    """Energy-aware FFT service vs naive per-request execution.
+
+    Reports service-level joules-per-transform, p50/p99 latency, cache
+    behaviour (a repeated-shape stream must sweep each shape exactly once),
+    and batched vs per-request throughput.
+    """
+    from repro.core.hardware import TPU_V5E
+    from repro.serving import FFTService
+
+    rng = np.random.default_rng(0)
+    lengths = [1024, 4096, 1024, 2048]            # repeated shapes on purpose
+    stream = _synthetic_stream(rng, lengths, n_requests=64)
+
+    def play(service, stream, wave):
+        """Stream requests in waves; returns (wall time, pass receipts).
+
+        Each drain is one serving cycle — every wave after the first hits
+        the plan/sweep cache (no re-sweep).
+        """
+        receipts = []
+        t0 = time.perf_counter()
+        for start in range(0, len(stream), wave):
+            for x in stream[start:start + wave]:
+                service.submit(x)
+            receipts.extend(service.drain())
+        return time.perf_counter() - t0, receipts
+
+    svc = FFTService(TPU_V5E, keep_results=False)
+    naive = FFTService(TPU_V5E, keep_results=False, coalesce_requests=False)
+    # Warm both services (JIT compilation is one-time in a long-running
+    # server), then measure a steady-state pass.
+    play(svc, stream, wave=8)
+    play(naive, stream, wave=8)
+    wall_batched, steady = play(svc, stream, wave=8)
+    rep = svc.report()
+    wall_naive, steady_naive = play(naive, stream, wave=8)
+    nrep = naive.report()
+    # Steady-state figures come from the timed pass only (the cumulative
+    # report also covers the JIT-compiling warm-up pass).
+    lat = np.array([r.latency for r in steady])
+    p50, p99 = np.percentile(lat, 50), np.percentile(lat, 99)
+    tps = sum(r.request.batch for r in steady) / wall_batched
+    tps_naive = sum(r.request.batch for r in steady_naive) / wall_naive
+
+    n_shapes = len(set(lengths))
+    _row("serving_stream", wall_batched / max(len(steady), 1) * 1e6,
+         f"J_per_fft={rep.joules_per_transform:.3e};"
+         f"p50_ms={p50*1e3:.2f};p99_ms={p99*1e3:.2f};"
+         f"I_ef={rep.i_ef:.2f};batches={rep.n_batches};"
+         f"sweeps={rep.cache.sweeps};cache_hits={rep.cache.hits};"
+         f"resweep_free={rep.cache.sweeps == n_shapes}")
+    _row("serving_vs_naive", wall_naive / max(len(steady_naive), 1) * 1e6,
+         f"batched_tput={tps:.0f}tps;naive_tput={tps_naive:.0f}tps;"
+         f"speedup={wall_naive/wall_batched:.2f}x;"
+         f"naive_batches={nrep.n_batches}")
+
+
 BENCHES = [fig4_exec_time, fig6_time_vs_freq, fig7_energy_u_shape,
            fig8_power_vs_freq, fig9_optimal_freq, table3_mean_optimal,
            fig10_gflops_per_watt, fig11_exec_increase, fig13_16_ief,
            table4_pipeline, kernels, roofline, dvfs_cells,
-           fft_pencil_roofline, conclusions_cost_co2]
+           fft_pencil_roofline, conclusions_cost_co2, serving]
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
+    args = sys.argv[1:] if argv is None else argv
+    by_name = {b.__name__: b for b in BENCHES}
+    if args:
+        unknown = [a for a in args if a not in by_name]
+        if unknown:
+            raise SystemExit(
+                f"unknown target(s) {unknown}; have {sorted(by_name)}")
+        selected = [by_name[a] for a in args]
+    else:
+        selected = BENCHES
     print("name,us_per_call,derived")
-    for b in BENCHES:
+    for b in selected:
         b()
 
 

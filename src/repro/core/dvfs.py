@@ -59,6 +59,31 @@ class SweepResult:
         """The sweep point closest to clock ``f`` (grid frequencies only)."""
         return min(self.points, key=lambda p: abs(p.f - f))
 
+    def optimal_under_budget(self, time_budget: float | None) -> OperatingPoint:
+        """Constrained optimum re-selected from the cached sweep points.
+
+        The serving layer sweeps each shape once and caches the result;
+        requests arriving later with different real-time budgets (Sec. 2.3)
+        re-select the minimum-energy feasible point from the cached grid
+        instead of re-running the sweep.
+        """
+        if time_budget is None:
+            return self.optimal
+        return _constrained_optimal(self.points, self.boost, time_budget)
+
+
+def _constrained_optimal(
+    points: list[OperatingPoint],
+    boost: OperatingPoint,
+    time_budget: float | None,
+) -> OperatingPoint:
+    """Minimum-energy point whose slowdown vs boost fits the Sec. 2.3 budget."""
+    feasible = [
+        p for p in points
+        if time_budget is None or p.time / boost.time - 1.0 <= time_budget
+    ]
+    return min(feasible or [boost], key=lambda p: p.energy)
+
 
 def sweep(
     profile: WorkloadProfile,
@@ -82,11 +107,7 @@ def sweep(
         freqs = np.unique(freqs)[::-1]
     points = evaluate(profile, device, pm, freqs)
     boost = points[0]
-    feasible = [
-        p for p in points
-        if time_budget is None or p.time / boost.time - 1.0 <= time_budget
-    ]
-    optimal = min(feasible or [boost], key=lambda p: p.energy)
+    optimal = _constrained_optimal(points, boost, time_budget)
     base = None
     if device.f_base is not None:
         base = evaluate(profile, device, pm, np.array([device.f_base]))[0]

@@ -19,7 +19,9 @@ benchmarks.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import time
 
 import numpy as np
 
@@ -121,6 +123,70 @@ class DVFSScheduler:
             t0 += pt.time
         return (np.concatenate(times), np.concatenate(powers),
                 np.concatenate(freqs))
+
+
+@dataclasses.dataclass(frozen=True)
+class ClockEvent:
+    """One clock-management call, timestamped relative to controller start."""
+
+    t: float                 # seconds since the controller was created
+    action: str              # "lock" | "reset"
+    f: float                 # clock in effect after the call [MHz]
+
+
+class ClockController:
+    """Runtime clock locking around dispatches (paper Sec. 5.3).
+
+    The paper brackets the cuFFT call with
+    ``nvmlDeviceSetGpuLockedClocks`` / ``nvmlDeviceResetGpuLockedClocks``.
+    This object is the serving-runtime analogue: ``with ctrl.locked(f):``
+    records the lock/reset pair (on real hardware the same two hooks call
+    into NVML or the platform power API) and keeps an event log from which
+    a service-level Fig. 19-style frequency trace can be reconstructed.
+    """
+
+    def __init__(self, device: DeviceSpec, timer=time.monotonic,
+                 max_events: int | None = None):
+        """``max_events`` bounds the event log for long-running services
+        (oldest events are dropped); None keeps the full history."""
+        import collections
+        self.device = device
+        self._timer = timer
+        self._t0 = timer()
+        self._f = device.f_max
+        self._lock_count = 0
+        self.events: collections.deque[ClockEvent] = collections.deque(
+            maxlen=max_events)
+
+    @property
+    def current_f(self) -> float:
+        return self._f
+
+    @property
+    def lock_count(self) -> int:
+        return self._lock_count
+
+    def _record(self, action: str, f: float) -> None:
+        self._f = f
+        if action == "lock":
+            self._lock_count += 1
+        self.events.append(ClockEvent(self._timer() - self._t0, action, f))
+
+    @contextlib.contextmanager
+    def locked(self, f: float):
+        """Lock the core clock to ``f`` for the duration of the block."""
+        prev = self._f
+        self._record("lock", f)
+        try:
+            yield
+        finally:
+            self._record("reset", prev)
+
+    def trace(self) -> tuple[np.ndarray, np.ndarray]:
+        """(t, f) step trace of every clock transition since start."""
+        ts = np.array([e.t for e in self.events])
+        fs = np.array([e.f for e in self.events])
+        return ts, fs
 
 
 def predicted_pipeline_i_ef(fft_share: float, fft_i_ef: float) -> float:

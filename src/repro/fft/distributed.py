@@ -30,16 +30,34 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 
+def pad_rows(x: jax.Array, rows: int) -> jax.Array:
+    """Zero-pad the leading (batch) dimension up to ``rows``."""
+    pad = rows - x.shape[0]
+    if pad <= 0:
+        return x
+    return jnp.concatenate(
+        [x, jnp.zeros((pad, *x.shape[1:]), x.dtype)], axis=0)
+
+
 def batch_parallel_fft(x: jax.Array, mesh: Mesh, *, axis: str = "data",
                        fft_fn=None) -> jax.Array:
-    """Batched FFT with the batch dimension sharded over ``axis``."""
+    """Batched FFT with the batch dimension sharded over ``axis``.
+
+    Batches that do not divide the axis size are zero-padded to the next
+    multiple, transformed, and sliced back — the serving layer coalesces
+    requests into arbitrary batch sizes, so divisibility cannot be assumed.
+    """
     from repro.fft.plan import plan_for_length
     fft_fn = fft_fn or plan_for_length(x.shape[-1])
+    d = mesh.shape[axis]
+    b = x.shape[0]
+    x = pad_rows(x, b + (-b) % d)
     spec = P(axis, None)
     fn = shard_map(
         lambda v: fft_fn(v), mesh=mesh, in_specs=(spec,), out_specs=spec
     )
-    return fn(x)
+    out = fn(x)
+    return out[:b] if out.shape[0] != b else out
 
 
 @functools.partial(jax.jit, static_argnames=("n1", "n2", "axis", "mesh"))

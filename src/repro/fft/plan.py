@@ -14,6 +14,7 @@ per pass), keeping the analytic model and the implementation consistent.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Callable
 
@@ -71,7 +72,14 @@ def four_step_fft(x: jax.Array, n1: int, n2: int) -> jax.Array:
     return out
 
 
+@functools.lru_cache(maxsize=None)
 def plan_for_length(n: int) -> FFTPlan:
+    """Build (or return the memoised) plan for length ``n``.
+
+    Plans are immutable and shape-keyed, so planning runs once per length
+    per process — the serving layer's plan cache builds on this, and
+    repeated pipeline construction never re-derives the decomposition.
+    """
     if _is_pow2(n):
         if n <= MAX_SINGLE_PASS:
             return FFTPlan(n, "stockham", 1, _fft)

@@ -180,6 +180,9 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    # jax < 0.4.35 returned [dict]; newer versions return the dict directly.
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     hlo_text = compiled.as_text()
     hlo = analyze_hlo(hlo_text)
 

@@ -1,6 +1,7 @@
 from repro.runtime.checkpoint import CheckpointManager
 from repro.runtime.fault import FaultTolerantDriver, SimulatedFailure
 from repro.runtime.elastic import elastic_remesh_plan
+from repro.runtime.workqueue import WorkStealingQueue
 
 __all__ = ["CheckpointManager", "FaultTolerantDriver", "SimulatedFailure",
-           "elastic_remesh_plan"]
+           "elastic_remesh_plan", "WorkStealingQueue"]

@@ -1,0 +1,21 @@
+"""Energy-aware streaming FFT serving (the paper's method, as a runtime).
+
+  request    FFTRequest / RequestReceipt / ShapeKey
+  batcher    Eq. 6 memory-budgeted request coalescing
+  cache      plan + DVFS-sweep cache (one sweep per shape, ever)
+  dispatch   work-stealing batch placement across devices
+  service    FFTService: enqueue -> batch -> plan-cache -> clock-plan ->
+             execute -> account (see docs/serving.md)
+"""
+from repro.serving.batcher import Batch, coalesce
+from repro.serving.cache import CacheEntry, CacheStats, PlanSweepCache
+from repro.serving.dispatch import Dispatcher
+from repro.serving.request import (KIND_FFT, KIND_PULSAR, FFTRequest,
+                                   RequestReceipt, ShapeKey)
+from repro.serving.service import FFTService, ServiceReport
+
+__all__ = [
+    "Batch", "CacheEntry", "CacheStats", "Dispatcher", "FFTRequest",
+    "FFTService", "KIND_FFT", "KIND_PULSAR", "PlanSweepCache",
+    "RequestReceipt", "ServiceReport", "ShapeKey", "coalesce",
+]

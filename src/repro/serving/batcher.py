@@ -1,0 +1,81 @@
+"""Request coalescing: group compatible requests into memory-bounded batches.
+
+The paper's Eq. (6), N_FFT = M_GB / (N * B), sizes a batch by how many
+length-N transforms fit a memory budget.  The batcher applies exactly that
+cap: pending requests are grouped by shape key (same kind, length,
+precision — transforms of different lengths cannot share one plan), kept
+in FIFO arrival order, and split whenever the accumulated transform count
+would exceed the Eq. 6 budget.
+
+A single request larger than the budget is never split (a client's batch
+is one array); it becomes an oversized batch of its own, which the
+executor shards across devices instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.energy import ffts_per_batch
+from repro.core.workloads import COMPLEX_BYTES
+from repro.serving.request import FFTRequest, ShapeKey
+
+
+@dataclasses.dataclass
+class Batch:
+    """One executable unit: same-shape requests fused into a single call."""
+
+    batch_id: int
+    key: ShapeKey
+    requests: list[FFTRequest]
+
+    @property
+    def n_transforms(self) -> int:
+        return sum(r.batch for r in self.requests)
+
+    @property
+    def bytes(self) -> int:
+        """Payload footprint at the batch's complex precision."""
+        return self.n_transforms * self.key.n * COMPLEX_BYTES[self.key.precision]
+
+    @property
+    def latency_budget(self) -> float | None:
+        """Strictest (smallest) per-request budget governs the whole batch."""
+        budgets = [r.latency_budget for r in self.requests
+                   if r.latency_budget is not None]
+        return min(budgets) if budgets else None
+
+
+def coalesce(
+    pending: list[FFTRequest],
+    *,
+    device_name: str,
+    batch_bytes: float,
+    start_id: int = 0,
+) -> list[Batch]:
+    """Coalesce ``pending`` (arrival order) into memory-bounded batches."""
+    groups: dict[ShapeKey, list[FFTRequest]] = {}
+    order: list[ShapeKey] = []
+    for req in pending:
+        key = req.shape_key(device_name)
+        if key not in groups:
+            groups[key] = []
+            order.append(key)
+        groups[key].append(req)
+
+    batches: list[Batch] = []
+    next_id = start_id
+    for key in order:
+        cap = ffts_per_batch(batch_bytes, key.n, COMPLEX_BYTES[key.precision])
+        current: list[FFTRequest] = []
+        count = 0
+        for req in groups[key]:
+            if current and count + req.batch > cap:
+                batches.append(Batch(next_id, key, current))
+                next_id += 1
+                current, count = [], 0
+            current.append(req)
+            count += req.batch
+        if current:
+            batches.append(Batch(next_id, key, current))
+            next_id += 1
+    return batches

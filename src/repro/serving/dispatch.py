@@ -1,0 +1,57 @@
+"""Batch dispatch across devices via a work-stealing queue.
+
+Batches land on the least-loaded device queue at submit time; during the
+drain loop each device pops its own queue FIFO and, when empty, steals
+the freshest batch from the longest queue (repro.runtime.workqueue).
+This is the paper's "FFTs which fit into GPU memory can be easily
+distributed amongst the GPUs" (Sec. 2.3) made operational: batch-parallel
+work needs no collectives, only load balance.
+
+The dispatcher is cooperative (round-robin ticks on one host), matching
+the repository's deterministic multi-device simulation style; on a real
+multi-accelerator host each worker slot maps to one consumer thread.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+
+from repro.runtime.workqueue import WorkStealingQueue
+from repro.serving.batcher import Batch
+
+
+class Dispatcher:
+    """Work-stealing executor over the visible JAX devices."""
+
+    def __init__(self, devices: Sequence[Any] | None = None):
+        self.devices = list(devices) if devices is not None else jax.devices()
+        self.queue = WorkStealingQueue(len(self.devices))
+
+    @property
+    def steals(self) -> int:
+        return self.queue.steals
+
+    def submit(self, batch: Batch) -> int:
+        """Queue a batch on the least-loaded device; returns the worker."""
+        return self.queue.push_least_loaded(batch)
+
+    def clear(self) -> list[Batch]:
+        """Remove and return every queued batch (failure recovery)."""
+        return self.queue.clear()
+
+    def drain(self, execute: Callable[[Batch, int, Any], None]) -> int:
+        """Run every queued batch; returns the number executed.
+
+        ``execute(batch, worker, device)`` is called once per batch, on the
+        worker that actually ran it (owner or thief).
+        """
+        executed = 0
+        while self.queue.pending():
+            for worker in range(self.queue.n_workers):
+                batch = self.queue.pop(worker)
+                if batch is None:
+                    continue
+                execute(batch, worker, self.devices[worker])
+                executed += 1
+        return executed

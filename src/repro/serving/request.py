@@ -1,0 +1,116 @@
+"""Request and receipt types for the energy-aware FFT service.
+
+A request is a batch of same-length transforms submitted by one client;
+a receipt is everything the paper would report about serving it: which
+clock it ran at, its modelled energy (Eqs. 3-4), and its measured queue +
+service latency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any
+
+from repro.core.workloads import COMPLEX_BYTES
+
+_REQUEST_IDS = itertools.count()
+
+#: Request kinds the service understands.
+KIND_FFT = "fft"            # batched 1-D C2C transform (the paper's workload)
+KIND_PULSAR = "pulsar"      # full Sec. 5.3 pulsar-search pipeline
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeKey:
+    """Cache key: one plan + one frequency sweep per distinct value.
+
+    The latency budget is deliberately NOT part of the key — budgets only
+    re-select a point from the cached sweep (SweepResult.optimal_under_budget),
+    they never require re-planning or re-sweeping.
+    """
+
+    kind: str
+    n: int
+    precision: str
+    n_harmonics: int = 0            # pulsar requests only; 0 for plain FFTs
+    device: str = ""
+
+
+@dataclasses.dataclass
+class FFTRequest:
+    """One client submission: ``x`` rows are independent transforms."""
+
+    x: Any                               # (batch, n) or (n,) array-like
+    precision: str = "fp32"
+    kind: str = KIND_FFT
+    latency_budget: float | None = None  # max tolerable slowdown vs boost
+    n_harmonics: int = 32                # pulsar kind only
+    request_id: int = dataclasses.field(
+        default_factory=lambda: next(_REQUEST_IDS))
+    t_enqueue: float = 0.0               # stamped by the service
+
+    def __post_init__(self):
+        if self.precision not in COMPLEX_BYTES:
+            raise ValueError(
+                f"unknown precision {self.precision!r}; "
+                f"have {sorted(COMPLEX_BYTES)}")
+        if self.kind not in (KIND_FFT, KIND_PULSAR):
+            raise ValueError(f"unknown request kind {self.kind!r}")
+        # Reject malformed payloads at submit time so one bad request can
+        # never poison a whole serving cycle.
+        ndim = getattr(self.x, "ndim", None)
+        if ndim not in (1, 2) or self.x.shape[-1] < 1:
+            raise ValueError(
+                f"payload must be a (batch, n) or (n,) array with n >= 1; "
+                f"got shape {getattr(self.x, 'shape', None)}")
+
+    @property
+    def n(self) -> int:
+        return int(self.x.shape[-1])
+
+    @property
+    def batch(self) -> int:
+        """Number of independent transforms in this request."""
+        return int(self.x.shape[0]) if self.x.ndim == 2 else 1
+
+    @property
+    def bytes(self) -> int:
+        """Device bytes of the request payload at its complex precision."""
+        return self.batch * self.n * COMPLEX_BYTES[self.precision]
+
+    def shape_key(self, device_name: str) -> ShapeKey:
+        return ShapeKey(
+            kind=self.kind, n=self.n, precision=self.precision,
+            n_harmonics=self.n_harmonics if self.kind == KIND_PULSAR else 0,
+            device=device_name)
+
+
+@dataclasses.dataclass
+class RequestReceipt:
+    """Per-request accounting, filled in when the batch executes."""
+
+    request: FFTRequest
+    batch_id: int
+    worker: int
+    # --- latency (measured wall clock, seconds) --------------------------
+    queue_latency: float        # enqueue -> batch execution start
+    service_latency: float      # execution start -> results ready
+    # --- energy/clock (analytic model, paper Eqs. 3-4 + Sec. 5.3) --------
+    clock_mhz: float            # the locked clock the batch ran at
+    modelled_time_s: float      # model-predicted execution time of this share
+    energy_j: float             # model-predicted energy of this share
+    boost_energy_j: float       # same share executed at the boost clock
+    result: Any = None          # transform output (None if not retained)
+
+    @property
+    def latency(self) -> float:
+        return self.queue_latency + self.service_latency
+
+    @property
+    def joules_per_transform(self) -> float:
+        return self.energy_j / max(self.request.batch, 1)
+
+    @property
+    def i_ef_boost(self) -> float:
+        """Eq. 7 for this request (identical work => energy ratio)."""
+        return self.boost_energy_j / self.energy_j if self.energy_j else 1.0

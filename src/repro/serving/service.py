@@ -1,0 +1,306 @@
+"""The energy-aware streaming FFT service.
+
+Request lifecycle (docs/serving.md walks through a full example):
+
+  enqueue      submit() stamps arrival time and parks the request
+  batch        drain() coalesces pending requests into Eq. 6-sized batches
+  plan-cache   each batch's shape hits the plan + sweep cache (one FFT plan
+               and one DVFS sweep per distinct shape, ever)
+  clock-plan   the batch's operating point is selected from the cached
+               sweep under the strictest per-request real-time budget
+  execute      the batch runs with the clock locked (ClockController), on
+               the device the work-stealing dispatcher assigned — or
+               sharded over the whole mesh for oversized batches
+  account      every request gets a receipt: queue/service latency
+               (measured) and energy at the locked vs boost clock
+               (modelled, Eqs. 3-4)
+
+The energy numbers come from the repository's analytic model — the same
+model the benchmarks validate against the paper — because this container
+has no power sensor; on instrumented hardware the accounting hook is one
+power-trace integration (repro.core.energy.energy_from_trace).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hardware import TPU_V5E, DeviceSpec
+from repro.core.power_model import PowerModel
+from repro.core.scheduler import ClockController
+from repro.serving.batcher import Batch, coalesce
+from repro.serving.cache import CacheStats, PlanSweepCache
+from repro.serving.dispatch import Dispatcher
+from repro.serving.request import (KIND_FFT, KIND_PULSAR, FFTRequest,
+                                   RequestReceipt)
+
+_EXEC_DTYPE = {"fp16": jnp.complex64, "fp32": jnp.complex64,
+               "fp64": jnp.complex128}
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceReport:
+    """Service-level summary over every receipt issued so far."""
+
+    n_requests: int
+    n_transforms: int
+    n_batches: int
+    wall_s: float                  # wall time spent executing batches
+    energy_j: float                # modelled energy at the locked clocks
+    boost_energy_j: float          # same work at boost (the GPU default)
+    p50_latency_s: float
+    p99_latency_s: float
+    mean_latency_s: float
+    cache: CacheStats
+    steals: int
+    clock_locks: int
+
+    @property
+    def joules_per_transform(self) -> float:
+        return self.energy_j / max(self.n_transforms, 1)
+
+    @property
+    def i_ef(self) -> float:
+        """Service-level Eq. 7 (identical work => energy ratio)."""
+        return self.boost_energy_j / self.energy_j if self.energy_j else 1.0
+
+    @property
+    def throughput_tps(self) -> float:
+        return self.n_transforms / self.wall_s if self.wall_s else 0.0
+
+
+class FFTService:
+    """Asynchronous-style FFT serving with batching, caching and DVFS.
+
+    ``device_spec`` drives the analytic DVFS/energy model (which clock each
+    batch locks to, what it costs); execution runs on the host's actual
+    JAX devices.  ``mesh`` (optional) shards plain-FFT batches over every
+    mesh device via repro.fft.distributed instead of placing them whole.
+    ``coalesce_requests=False`` disables batching (every request executes
+    alone) — the naive baseline the benchmarks compare against.
+    """
+
+    def __init__(
+        self,
+        device_spec: DeviceSpec = TPU_V5E,
+        *,
+        batch_bytes: float | None = None,
+        time_budget: float | None = 0.10,
+        devices: Sequence[Any] | None = None,
+        mesh: Any = None,
+        coalesce_requests: bool = True,
+        bucket_batches: bool = True,
+        keep_results: bool = True,
+        max_retained_receipts: int | None = None,
+        plan_fn=None,
+        sweep_fn=None,
+        power_model: PowerModel | None = None,
+        timer=time.monotonic,
+    ):
+        self.device_spec = device_spec
+        # Default batch budget: an eighth of device memory, capped at the
+        # paper's ~2 GB measurement batches (Sec. 4).
+        self.batch_bytes = (batch_bytes if batch_bytes is not None
+                            else min(2e9, device_spec.memory_bytes / 8))
+        self.time_budget = time_budget
+        self.mesh = mesh
+        self.coalesce_requests = coalesce_requests
+        self.bucket_batches = bucket_batches
+        self.keep_results = keep_results
+        # Receipts (which pin request payloads and, with keep_results,
+        # outputs) grow with traffic; long-running servers should bound
+        # retention — oldest receipts are evicted past the cap.  report()
+        # then summarises the retained window.
+        self.max_retained_receipts = max_retained_receipts
+        self._timer = timer
+        kwargs = {}
+        if plan_fn is not None:
+            kwargs["plan_fn"] = plan_fn
+        if sweep_fn is not None:
+            kwargs["sweep_fn"] = sweep_fn
+        self.cache = PlanSweepCache(
+            device_spec, batch_bytes=self.batch_bytes,
+            power_model=power_model, **kwargs)
+        self.clock = ClockController(
+            device_spec, timer=timer,
+            max_events=(None if max_retained_receipts is None
+                        else 2 * max_retained_receipts))
+        # With a mesh the whole mesh executes each batch, so one worker.
+        self.dispatcher = Dispatcher(
+            devices=[None] if mesh is not None else devices)
+        self._pending: list[FFTRequest] = []
+        self._receipts: dict[int, RequestReceipt] = {}
+        self._next_batch_id = 0
+
+    # ------------------------------------------------------------------ #
+    # enqueue
+    # ------------------------------------------------------------------ #
+
+    def submit(
+        self,
+        x: Any,
+        *,
+        precision: str = "fp32",
+        kind: str = KIND_FFT,
+        latency_budget: float | None = None,
+        n_harmonics: int = 32,
+    ) -> FFTRequest:
+        """Enqueue one request (a (batch, n) or (n,) array); returns it.
+
+        The request's receipt becomes available after the next drain():
+        ``service.receipt(request)``.
+        """
+        req = FFTRequest(x=jnp.asarray(x), precision=precision, kind=kind,
+                         latency_budget=latency_budget,
+                         n_harmonics=n_harmonics)
+        req.t_enqueue = self._timer()
+        self._pending.append(req)
+        return req
+
+    def receipt(self, request: FFTRequest) -> RequestReceipt | None:
+        return self._receipts.get(request.request_id)
+
+    @property
+    def receipts(self) -> list[RequestReceipt]:
+        return [self._receipts[k] for k in sorted(self._receipts)]
+
+    # ------------------------------------------------------------------ #
+    # batch -> plan-cache -> clock-plan -> execute -> account
+    # ------------------------------------------------------------------ #
+
+    def drain(self) -> list[RequestReceipt]:
+        """Serve every pending request; returns their receipts in order.
+
+        If a batch fails mid-cycle, already-served requests keep their
+        receipts and every unserved request is re-queued for the next
+        drain before the error propagates — one bad batch never drops
+        the rest of the wave.
+        """
+        pending, self._pending = self._pending, []
+        if not pending:
+            return []
+        try:
+            if self.coalesce_requests:
+                batches = coalesce(pending, device_name=self.device_spec.name,
+                                   batch_bytes=self.batch_bytes,
+                                   start_id=self._next_batch_id)
+            else:
+                batches = [
+                    Batch(self._next_batch_id + i,
+                          r.shape_key(self.device_spec.name), [r])
+                    for i, r in enumerate(pending)
+                ]
+            self._next_batch_id += len(batches)
+            for batch in batches:
+                self.dispatcher.submit(batch)
+            self.dispatcher.drain(self._execute)
+        except BaseException:
+            self.dispatcher.clear()          # drop stale queued batches
+            unserved = [r for r in pending
+                        if r.request_id not in self._receipts]
+            self._pending = unserved + self._pending
+            raise
+        return [self._receipts[r.request_id] for r in pending
+                if r.request_id in self._receipts]   # cap may have evicted
+
+    def _stack(self, batch: Batch) -> jax.Array:
+        rows = [jnp.atleast_2d(r.x) for r in batch.requests]
+        x = jnp.concatenate(rows, axis=0) if len(rows) > 1 else rows[0]
+        if batch.key.kind == KIND_FFT:
+            return x.astype(_EXEC_DTYPE[batch.key.precision])
+        # The pulsar pipeline consumes real time series.
+        return x.real.astype(jnp.float32)
+
+    def _effective_budget(self, batch: Batch) -> float | None:
+        """Strictest real-time budget across the batch's requests.
+
+        Budget-less requests fall back to the service default, so a loose
+        explicit budget on one request can never relax the guarantee owed
+        to a coalesced neighbour; None (from a request AND the default)
+        means unconstrained.
+        """
+        budgets = [self.time_budget if r.latency_budget is None
+                   else r.latency_budget for r in batch.requests]
+        constrained = [b for b in budgets if b is not None]
+        return min(constrained) if constrained else None
+
+    def _execute(self, batch: Batch, worker: int, device: Any) -> None:
+        entry = self.cache.entry(batch.key)
+        point = entry.point_for(self._effective_budget(batch))
+        x = self._stack(batch)
+        rows = x.shape[0]
+        if self.bucket_batches:
+            # Shape bucketing: pad the row count to the next power of two so
+            # streaming drains reuse a handful of compiled shapes instead of
+            # recompiling for every coalesced batch size.
+            from repro.fft.distributed import pad_rows
+            x = pad_rows(x, 1 << (rows - 1).bit_length())
+        t_start = self._timer()
+        with self.clock.locked(point.f):
+            if (self.mesh is not None and batch.key.kind == KIND_FFT
+                    and x.shape[0] > 1):
+                from repro.fft.distributed import batch_parallel_fft
+                y = batch_parallel_fft(x, self.mesh, fft_fn=entry.plan)
+            else:
+                if device is not None:
+                    x = jax.device_put(x, device)
+                y = entry.fn(x)
+            y = jax.block_until_ready(y)
+        y = y[:rows]
+        t_done = self._timer()
+        self._account(batch, worker, entry, point, y, t_start, t_done)
+
+    def _account(self, batch, worker, entry, point, y, t_start, t_done):
+        per_time, per_energy = entry.per_transform(point)
+        _, per_boost = entry.per_transform(entry.sweep.boost)
+        offset = 0
+        for req in batch.requests:
+            rows = req.batch
+            result = y[offset:offset + rows] if self.keep_results else None
+            offset += rows
+            if (self.max_retained_receipts is not None
+                    and len(self._receipts) >= self.max_retained_receipts):
+                self._receipts.pop(next(iter(self._receipts)))  # oldest
+            self._receipts[req.request_id] = RequestReceipt(
+                request=req,
+                batch_id=batch.batch_id,
+                worker=worker,
+                queue_latency=max(t_start - req.t_enqueue, 0.0),
+                service_latency=t_done - t_start,
+                clock_mhz=point.f,
+                modelled_time_s=per_time * rows,
+                energy_j=per_energy * rows,
+                boost_energy_j=per_boost * rows,
+                result=result,
+            )
+
+    # ------------------------------------------------------------------ #
+    # service-level reporting
+    # ------------------------------------------------------------------ #
+
+    def report(self) -> ServiceReport:
+        receipts = self.receipts
+        lat = np.array([r.latency for r in receipts]) if receipts else np.zeros(1)
+        # One wall-time contribution per batch (receipts in a batch share
+        # the batch's service latency), over the *retained* window so every
+        # report field covers the same receipts when retention is capped.
+        batch_wall = {r.batch_id: r.service_latency for r in receipts}
+        return ServiceReport(
+            n_requests=len(receipts),
+            n_transforms=sum(r.request.batch for r in receipts),
+            n_batches=len(batch_wall),
+            wall_s=sum(batch_wall.values()),
+            energy_j=sum(r.energy_j for r in receipts),
+            boost_energy_j=sum(r.boost_energy_j for r in receipts),
+            p50_latency_s=float(np.percentile(lat, 50)),
+            p99_latency_s=float(np.percentile(lat, 99)),
+            mean_latency_s=float(lat.mean()),
+            cache=self.cache.stats,
+            steals=self.dispatcher.steals,
+            clock_locks=self.clock.lock_count,
+        )

@@ -1,4 +1,10 @@
+import os
+import sys
+
 import pytest
+
+# Make the _hyp fallback importable regardless of pytest's import mode.
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
 
 def pytest_configure(config):

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:          # optional test dep: skip property tests
+    from _hyp import given, settings, st
 
 from repro.fft import bluestein_fft, fft, fft2, ifft, plan_for_length
 from repro.fft.plan import four_step_fft

@@ -1,7 +1,11 @@
 """Property-based tests (hypothesis) for system invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:          # optional test dep: skip property tests
+    from _hyp import given, settings, st
 from jax.sharding import PartitionSpec as P
 
 from repro.core.dvfs import sweep

@@ -1,0 +1,304 @@
+"""Serving runtime: coalescing, plan/sweep caching, work stealing,
+end-to-end correctness against the single-device oracle."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dvfs
+from repro.core.hardware import TESLA_V100, TPU_V5E
+from repro.core.scheduler import ClockController
+from repro.core.workloads import COMPLEX_BYTES
+from repro.fft.plan import plan_for_length
+from repro.runtime.workqueue import WorkStealingQueue
+from repro.serving import FFTService, FFTRequest, coalesce
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rand_complex(shape, key=KEY):
+    kr, ki = jax.random.split(key)
+    return (jax.random.normal(kr, shape) +
+            1j * jax.random.normal(ki, shape)).astype(jnp.complex64)
+
+
+def requests(sizes, n):
+    return [FFTRequest(x=rand_complex((b, n), jax.random.PRNGKey(i)))
+            for i, b in enumerate(sizes)]
+
+
+# ---------------------------------------------------------------------------
+# batch coalescing (Eq. 6 memory budget)
+# ---------------------------------------------------------------------------
+
+def test_coalescing_respects_memory_budget():
+    n = 256
+    budget = 8 * n * COMPLEX_BYTES["fp32"]        # room for 8 transforms
+    reqs = requests([3, 3, 3, 3, 3], n)           # 15 transforms total
+    batches = coalesce(reqs, device_name="d", batch_bytes=budget)
+    assert sum(b.n_transforms for b in batches) == 15
+    for b in batches:
+        assert b.bytes <= budget
+    # FIFO order preserved across the split
+    flat = [r.request_id for b in batches for r in b.requests]
+    assert flat == [r.request_id for r in reqs]
+
+
+def test_coalescing_never_mixes_shapes():
+    reqs = requests([2, 2], 256) + requests([2], 512)
+    batches = coalesce(reqs, device_name="d", batch_bytes=1e9)
+    assert len(batches) == 2
+    assert {b.key.n for b in batches} == {256, 512}
+
+
+def test_oversized_single_request_gets_own_batch():
+    n = 256
+    budget = 4 * n * COMPLEX_BYTES["fp32"]
+    reqs = requests([2, 10, 2], n)                # middle one exceeds budget
+    batches = coalesce(reqs, device_name="d", batch_bytes=budget)
+    # the oversized request is not split, and not merged with others
+    oversized = [b for b in batches if b.n_transforms > 4]
+    assert len(oversized) == 1 and len(oversized[0].requests) == 1
+
+
+def test_strictest_latency_budget_governs_batch():
+    n = 128
+    reqs = requests([1, 1, 1], n)
+    reqs[1].latency_budget = 0.30
+    reqs[2].latency_budget = 0.05
+    (batch,) = coalesce(reqs, device_name="d", batch_bytes=1e9)
+    assert batch.latency_budget == pytest.approx(0.05)
+
+
+# ---------------------------------------------------------------------------
+# plan + sweep cache (call counting)
+# ---------------------------------------------------------------------------
+
+def test_cache_hits_skip_recomputation():
+    plan_calls, sweep_calls = [], []
+
+    def counting_plan(n):
+        plan_calls.append(n)
+        return plan_for_length(n)
+
+    def counting_sweep(profile, device, power_model=None, **kw):
+        sweep_calls.append(profile.name)
+        return dvfs.sweep(profile, device, power_model, **kw)
+
+    svc = FFTService(TPU_V5E, plan_fn=counting_plan, sweep_fn=counting_sweep)
+    for wave in range(3):                          # repeated-shape stream
+        for i in range(4):
+            svc.submit(rand_complex((2, 512), jax.random.PRNGKey(wave * 4 + i)))
+        svc.drain()
+    # one plan build and one sweep ever, despite 12 requests / 3 drains
+    assert plan_calls == [512]
+    assert len(sweep_calls) == 1
+    stats = svc.cache.stats
+    assert stats.misses == 1 and stats.hits >= 2
+    assert stats.sweeps == 1 and stats.plan_builds == 1
+
+
+def test_budget_reselects_from_cached_sweep_without_resweep():
+    sweep_calls = []
+
+    def counting_sweep(profile, device, power_model=None, **kw):
+        sweep_calls.append(profile.name)
+        return dvfs.sweep(profile, device, power_model, **kw)
+
+    # N=8192 on the V100: the unconstrained optimum carries a small positive
+    # slowdown, so a zero budget must select a higher clock.  Separate
+    # drains put the two requests in separate batches (a batch runs at its
+    # strictest member budget).
+    svc = FFTService(TESLA_V100, sweep_fn=counting_sweep)
+    tight = svc.submit(rand_complex((2, 8192)), latency_budget=0.0)
+    svc.drain()
+    loose = svc.submit(rand_complex((2, 8192), jax.random.PRNGKey(9)),
+                       latency_budget=2.0)
+    svc.drain()
+    assert len(sweep_calls) == 1                  # same shape: one sweep
+    rt, rl = svc.receipt(tight), svc.receipt(loose)
+    assert rt.clock_mhz > rl.clock_mhz
+    entry = svc.cache.entry(tight.shape_key(TESLA_V100.name))
+    pt = entry.sweep.at(rt.clock_mhz)
+    assert pt.time / entry.sweep.boost.time - 1.0 <= 1e-9
+
+
+def test_service_default_budget_not_relaxed_by_loose_neighbour():
+    """A coalesced request with a loose explicit budget must not strip the
+    service-default guarantee from a budget-less neighbour."""
+    svc = FFTService(TESLA_V100, time_budget=0.0)
+    a = svc.submit(rand_complex((1, 8192)))              # service default
+    svc.submit(rand_complex((1, 8192), jax.random.PRNGKey(2)),
+               latency_budget=2.0)                       # same batch, loose
+    svc.drain()
+    ra = svc.receipt(a)
+    entry = svc.cache.entry(a.shape_key(TESLA_V100.name))
+    pt = entry.sweep.at(ra.clock_mhz)
+    assert pt.time / entry.sweep.boost.time - 1.0 <= 1e-9
+
+
+def test_sweep_optimal_under_budget_monotone():
+    from repro.core.workloads import FFTCase, fft_workload
+    res = dvfs.sweep(fft_workload(FFTCase(n=2**14), TESLA_V100), TESLA_V100)
+    clocks = [res.optimal_under_budget(b).f for b in (0.0, 0.02, 0.10, None)]
+    assert clocks == sorted(clocks, reverse=True)
+    assert res.optimal_under_budget(None).f == res.optimal.f
+
+
+# ---------------------------------------------------------------------------
+# work stealing
+# ---------------------------------------------------------------------------
+
+def test_work_stealing_balances_queues():
+    q = WorkStealingQueue(2)
+    for i in range(4):
+        q.push(0, f"job{i}")                      # all work on worker 0
+    got = [q.pop(1), q.pop(1)]                    # worker 1 must steal
+    assert q.steals == 2
+    assert got == ["job3", "job2"]                # thief takes from the back
+    assert q.pop(0) == "job0"                     # owner pops FIFO
+    assert q.pop(0) == "job1"
+    assert q.pop(0) is None and q.pending() == 0
+
+
+def test_push_least_loaded_round_robins():
+    q = WorkStealingQueue(3)
+    workers = [q.push_least_loaded(i) for i in range(6)]
+    assert sorted(workers) == [0, 0, 1, 1, 2, 2]
+    assert q.lengths() == [2, 2, 2]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end service
+# ---------------------------------------------------------------------------
+
+def test_service_results_match_oracle():
+    svc = FFTService(TPU_V5E)
+    payloads = [np.asarray(rand_complex((b, 1024), jax.random.PRNGKey(b)))
+                for b in (1, 3, 2)]
+    reqs = [svc.submit(p) for p in payloads]
+    svc.drain()
+    for req, p in zip(reqs, payloads):
+        r = svc.receipt(req)
+        np.testing.assert_allclose(np.asarray(r.result),
+                                   np.fft.fft(p, axis=-1),
+                                   rtol=3e-3, atol=3e-3)
+        assert r.energy_j > 0 and r.boost_energy_j >= r.energy_j
+        assert r.latency >= 0 and r.clock_mhz <= TPU_V5E.f_max
+    rep = svc.report()
+    assert rep.n_requests == 3 and rep.n_transforms == 6
+    assert rep.n_batches == 1                     # all coalesced
+    assert rep.i_ef >= 1.0
+    assert rep.p50_latency_s <= rep.p99_latency_s
+    assert rep.joules_per_transform > 0
+
+
+def test_service_pulsar_requests():
+    svc = FFTService(TPU_V5E)
+    x = np.asarray(jax.random.normal(KEY, (2, 2048)), dtype=np.float32)
+    req = svc.submit(x, kind="pulsar", n_harmonics=8)
+    svc.drain()
+    r = svc.receipt(req)
+    assert r.result.shape == (2, 4, 2048)         # h = 1, 2, 4, 8 levels
+    from repro.fft.pipeline import pulsar_pipeline
+    np.testing.assert_allclose(np.asarray(r.result),
+                               np.asarray(pulsar_pipeline(jnp.asarray(x), 8)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_clock_controller_pairs_lock_and_reset():
+    ctrl = ClockController(TPU_V5E)
+    with ctrl.locked(800.0):
+        assert ctrl.current_f == 800.0
+        with ctrl.locked(600.0):                  # nested lock restores outer
+            assert ctrl.current_f == 600.0
+        assert ctrl.current_f == 800.0
+    assert ctrl.current_f == TPU_V5E.f_max
+    assert ctrl.lock_count == 2
+    actions = [e.action for e in ctrl.events]
+    assert actions == ["lock", "lock", "reset", "reset"]
+
+
+def test_service_clock_locks_bracket_batches():
+    svc = FFTService(TPU_V5E)
+    svc.submit(rand_complex((1, 256)))
+    svc.submit(rand_complex((1, 512), jax.random.PRNGKey(1)))
+    svc.drain()
+    rep = svc.report()
+    assert rep.n_batches == 2
+    assert rep.clock_locks == 2                   # one lock/reset per batch
+    assert svc.clock.current_f == TPU_V5E.f_max   # always reset after
+
+
+def test_malformed_payload_rejected_at_submit():
+    svc = FFTService(TPU_V5E)
+    with pytest.raises(ValueError, match="payload"):
+        svc.submit(np.float32(5.0))               # 0-d scalar
+    with pytest.raises(ValueError, match="precision"):
+        svc.submit(np.zeros((1, 8), np.complex64), precision="fp8")
+
+
+def test_failed_batch_requeues_unserved_requests():
+    svc = FFTService(TPU_V5E)
+    ok = svc.submit(rand_complex((1, 128)))
+    bad = svc.submit(rand_complex((1, 256), jax.random.PRNGKey(1)))
+    boom = RuntimeError("injected device failure")
+    real_execute = svc._execute
+
+    def flaky(batch, worker, device):
+        if batch.key.n == 256:
+            raise boom
+        real_execute(batch, worker, device)
+
+    svc._execute = flaky
+    with pytest.raises(RuntimeError):
+        svc.drain()
+    # the healthy request was served; the failed one is re-queued, and no
+    # stale batch lingers in the dispatcher
+    assert svc.receipt(ok) is not None
+    assert svc.receipt(bad) is None
+    assert [r.request_id for r in svc._pending] == [bad.request_id]
+    assert svc.dispatcher.queue.pending() == 0
+    svc._execute = real_execute
+    svc.drain()                                   # next cycle serves it
+    assert svc.receipt(bad) is not None
+
+
+def test_receipt_retention_cap_evicts_oldest():
+    svc = FFTService(TPU_V5E, max_retained_receipts=3)
+    reqs = [svc.submit(rand_complex((1, 64), jax.random.PRNGKey(i)))
+            for i in range(5)]
+    svc.drain()
+    assert len(svc.receipts) == 3
+    assert svc.receipt(reqs[0]) is None           # evicted
+    assert svc.receipt(reqs[-1]) is not None
+    assert svc.report().n_requests == 3           # report covers the window
+
+
+# ---------------------------------------------------------------------------
+# multi-device sharding vs the single-device oracle (subprocess, slow)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_sharded_service_matches_single_device_oracle():
+    from test_distributed import run_with_devices
+    run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.hardware import TPU_V5E
+        from repro.serving import FFTService
+
+        mesh = jax.make_mesh((4,), ("data",))
+        svc = FFTService(TPU_V5E, mesh=mesh)
+        key = jax.random.PRNGKey(0)
+        # 5 transforms: not divisible by 4 devices -> exercises padding
+        x = (jax.random.normal(key, (5, 512)) +
+             1j * jax.random.normal(jax.random.PRNGKey(1), (5, 512))
+             ).astype(jnp.complex64)
+        req = svc.submit(np.asarray(x))
+        svc.drain()
+        got = np.asarray(svc.receipt(req).result)
+        np.testing.assert_allclose(got, np.fft.fft(np.asarray(x), axis=-1),
+                                   rtol=2e-3, atol=2e-3)
+        print("sharded ok")
+    """, n_devices=4)
