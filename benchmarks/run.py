@@ -15,6 +15,8 @@ figure's headline quantity).
   fig13_16_ief          efficiency increase vs boost & base clocks
   table4_pipeline       pulsar pipeline w/ per-stage clock locking
   kernels               Pallas kernels (interpret) vs jnp oracle wall time
+  fft                   mixed-radix engine: stages, R2C vs C2C wall time,
+                        J/transform model -> persists BENCH_fft.json
   roofline              the dry-run roofline table (artifacts)
   dvfs_cells            the paper's technique applied to every dry-run cell
   serving               the energy-aware FFT service on a synthetic stream
@@ -37,13 +39,18 @@ import numpy as np
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
 
 
-def _timeit(fn, *args, n=5, warmup=2):
+def _timeit(fn, *args, n=5, warmup=2, reduce=None):
+    """Wall time per call [us]: mean of n by default, or e.g. ``min`` —
+    best-of-n is robust to scheduler noise on shared CPUs."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    samples = []
     for _ in range(n):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / n * 1e6        # us
+        samples.append(time.perf_counter() - t0)
+    agg = sum(samples) / n if reduce is None else reduce(samples)
+    return agg * 1e6
 
 
 def _row(name, us, derived):
@@ -284,6 +291,92 @@ def fft_pencil_roofline():
              f"fits={a['memory']['fits_16gb']}")
 
 
+def fft():
+    """Mixed-radix FFT engine microbench — persists BENCH_fft.json.
+
+    Per length 2^10..2^22: plan route, HBM passes, butterfly stage count
+    (radix-2 vs mixed-radix), modelled J/transform at the optimal clock
+    (C2C vs R2C), and measured wall time (C2C vs R2C) through the routed
+    plans (Pallas kernel in interpret mode off-TPU).  Long lengths are
+    wall-timed only up to REPRO_FFT_BENCH_MAX_LOG2_WALL (default 13) —
+    interpret mode is an emulator, not a clock; the analytic rows still
+    cover the full range.
+    """
+    from repro.core.dvfs import energy_per_transform, sweep
+    from repro.core.hardware import TESLA_V100
+    from repro.core.workloads import FFTCase, fft_workload
+    from repro.fft.plan import _four_step_split, plan_for_length
+    from repro.fft.radix import stage_count
+
+    wall_max = int(os.environ.get("REPRO_FFT_BENCH_MAX_LOG2_WALL", "13"))
+    dev = TESLA_V100
+    rows = []
+    for logn in range(10, 23):
+        n = 2**logn
+        plan_c = plan_for_length(n)
+        plan_r = plan_for_length(n, "r2c")
+        # Like-for-like: sum stages over the plan's pow2 passes for both
+        # engines (a radix-2 four-step would run log2(n1)+log2(n2) stages).
+        if plan_c.algorithm == "four-step":
+            n1, n2 = _four_step_split(n)
+            stages_r2 = stage_count(n1, (2,)) + stage_count(n2, (2,))
+        else:
+            stages_r2 = stage_count(n, (2,))
+        row = {
+            "n": n,
+            "algorithm": plan_c.algorithm,
+            "passes_c2c": plan_c.passes,
+            "passes_r2c": plan_r.passes,
+            "stages_radix2": stages_r2,
+            "stages_mixed": plan_c.stages,
+            "stage_ratio": stages_r2 / max(plan_c.stages, 1),
+        }
+        for transform, plan in (("c2c", plan_c), ("r2c", plan_r)):
+            case = FFTCase(n=n, transform=transform, radices=(4, 2))
+            res = sweep(fft_workload(case, dev), dev)
+            per = energy_per_transform(res, case.n_fft)
+            row[f"model_j_per_fft_{transform}"] = per["optimal_j"]
+            row[f"model_j_per_fft_{transform}_boost"] = per["boost_j"]
+        if logn <= wall_max:
+            batch = max(2**19 // n, 16)
+            key = jax.random.PRNGKey(0)
+            xr = jax.random.normal(key, (batch, n), jnp.float32)
+            xc = (xr + 1j * jax.random.normal(key, (batch, n))
+                  ).astype(jnp.complex64)
+            row["batch"] = batch
+            row["wall_us_c2c"] = _timeit(jax.jit(plan_c.fn), xc,
+                                         n=7, warmup=3, reduce=min)
+            row["wall_us_r2c"] = _timeit(jax.jit(plan_r.fn), xr,
+                                         n=7, warmup=3, reduce=min)
+            row["r2c_over_c2c"] = row["wall_us_r2c"] / row["wall_us_c2c"]
+        rows.append(row)
+        _row(f"fft_n{n}", row.get("wall_us_c2c", 0.0),
+             f"alg={row['algorithm']};stages={row['stages_mixed']}v"
+             f"{row['stages_radix2']};"
+             f"r2c_ratio={row.get('r2c_over_c2c', float('nan')):.2f}")
+
+    by_n = {r["n"]: r for r in rows}
+    head = by_n[4096]
+    out = {
+        "device_model": dev.name,
+        "radices": [4, 2],
+        "backend": jax.default_backend(),
+        # Headline acceptance figures at N = 2^12 (single fused pass).
+        "criteria": {
+            "stage_ratio_n4096": head["stage_ratio"],
+            "r2c_over_c2c_wall_n4096": head.get("r2c_over_c2c"),
+        },
+        "lengths": rows,
+    }
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_fft.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    _row("fft_bench_json", 0.0,
+         f"written={os.path.abspath(path)};"
+         f"stage_ratio_n4096={head['stage_ratio']:.2f};"
+         f"r2c_over_c2c_n4096={head.get('r2c_over_c2c', float('nan')):.2f}")
+
+
 def _synthetic_stream(rng, lengths, n_requests):
     """A repeated-shape request stream: (payload, length) tuples."""
     stream = []
@@ -357,7 +450,7 @@ def serving():
 BENCHES = [fig4_exec_time, fig6_time_vs_freq, fig7_energy_u_shape,
            fig8_power_vs_freq, fig9_optimal_freq, table3_mean_optimal,
            fig10_gflops_per_watt, fig11_exec_increase, fig13_16_ief,
-           table4_pipeline, kernels, roofline, dvfs_cells,
+           table4_pipeline, kernels, fft, roofline, dvfs_cells,
            fft_pencil_roofline, conclusions_cost_co2, serving]
 
 

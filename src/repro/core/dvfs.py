@@ -115,6 +115,27 @@ def sweep(
                        boost=boost, base=base)
 
 
+def energy_per_transform(result: SweepResult, n_transforms: int
+                         ) -> dict[str, float]:
+    """Per-transform J/time at the optimal and boost clocks (Eqs. 3-6).
+
+    The sweep models a memory-budget-sized batch of ``n_transforms``
+    transforms (Eq. 6); energy and time are linear in the count, so
+    per-transform figures are exact divisions.  This is the J/transform
+    proxy the ``fft`` benchmark target persists — an R2C sweep at the same
+    N carries ~2x the transforms per batch at ~the same batch energy,
+    which is exactly the paper's Eq. 5/6 argument for real inputs.
+    """
+    k = max(n_transforms, 1)
+    return {
+        "optimal_j": result.optimal.energy / k,
+        "boost_j": result.boost.energy / k,
+        "optimal_s": result.optimal.time / k,
+        "boost_s": result.boost.time / k,
+        "optimal_mhz": result.optimal.f,
+    }
+
+
 @dataclasses.dataclass(frozen=True)
 class MeanOptimal:
     """Table 3 row: one clock for a whole workload family."""

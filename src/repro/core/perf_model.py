@@ -143,6 +143,8 @@ def absolute_profile(
     collective_bytes: float = 0.0,
     contention: float = 0.0,
     mxu_flops: float | None = None,
+    stages: float = 0.0,
+    stage_bytes: float = 0.0,
 ) -> WorkloadProfile:
     """Build a profile from absolute traffic/flop counts.
 
@@ -152,9 +154,16 @@ def absolute_profile(
     ceiling is issue-limited — the paper's Fig. 20 shows issue-slot
     utilisation is what saturates first.  ``mxu_flops`` (default: ``flops``)
     is what actually occupies the matrix/vector units.
+
+    ``stages``/``stage_bytes`` express staged-kernel cache traffic
+    (butterfly stages x working-set bytes exchanged per stage, see
+    ``repro.fft.radix.stage_count``): they add ``stages * stage_bytes`` to
+    ``cache_bytes`` — how a mixed-radix FFT's reduced stage count feeds
+    the t_cache term of the frequency model.
     """
     if mxu_flops is None:
         mxu_flops = flops
+    cache_bytes = cache_bytes + stages * stage_bytes
     t_issue = flops / (device.peak_flops * issue_efficiency) if flops else 0.0
     return WorkloadProfile(
         name=name,

@@ -51,6 +51,33 @@ def uses_bluestein(n: int) -> bool:
     return largest_prime_factor(n) > 127
 
 
+def _butterfly_flops(n: int, radices: tuple[int, ...] | None) -> float:
+    """FLOPs of one length-``n`` transform.
+
+    ``radices=None`` keeps the paper's Eq. 5 reporting convention
+    (5 N log2 N); an explicit schedule counts the operations the
+    mixed-radix engine actually executes (repro.fft.radix).
+    """
+    if n <= 1:
+        return 0.0
+    if radices is None:
+        return 5.0 * n * math.log2(n)
+    from repro.fft.radix import mixed_radix_flop_count
+    return mixed_radix_flop_count(n, radices)
+
+
+def _stage_count(n: int, radices: tuple[int, ...] | None) -> float:
+    """Butterfly stages of one fused pass (feeds the t_cache term).
+
+    ``radices=None`` keeps the legacy cuFFT-flavoured radix-8 estimate
+    (log2(N)/3) the paper calibration is pinned against.
+    """
+    if radices is None:
+        return max(math.log2(max(n, 2)), 1.0) / 3.0
+    from repro.fft.radix import stage_count
+    return float(stage_count(n, radices))
+
+
 def plan_passes(n: int, *, max_inplace: int = 2**13) -> int:
     """Number of device-memory passes of the FFT plan.
 
@@ -66,27 +93,58 @@ def plan_passes(n: int, *, max_inplace: int = 2**13) -> int:
     return max(1, math.ceil(math.log(n) / math.log(max_inplace)))
 
 
+#: Transform kinds the analytic model understands.
+TRANSFORMS = ("c2c", "r2c", "c2r")
+
+
 @dataclasses.dataclass(frozen=True)
 class FFTCase:
-    """One measured configuration: a length, precision and batch memory."""
+    """One measured configuration: length, precision, transform and batch.
+
+    ``transform``: C2C (the paper's workload) or the real-input R2C / its
+    C2R inverse — real transforms pack N points into an N/2 complex FFT,
+    so both the per-transform element size (Eq. 6) and the FLOP count
+    (Eq. 5) halve.
+
+    ``radices``: the kernel's butterfly schedule, feeding radix-aware
+    stage/FLOP counts.  ``None`` keeps the legacy cuFFT-convention model
+    the paper calibration is pinned against (radix-8-style stage count,
+    5 N log2 N FLOPs).
+    """
 
     n: int
     precision: str = "fp32"
     batch_bytes: float = 2e9      # paper: ~2 GB of input per batch
     name: str = ""
+    transform: str = "c2c"
+    radices: tuple[int, ...] | None = None
 
     def __post_init__(self):
+        if self.transform not in TRANSFORMS:
+            raise ValueError(f"unknown transform {self.transform!r}; "
+                             f"have {TRANSFORMS}")
         if not self.name:
+            suffix = "" if self.transform == "c2c" else f"-{self.transform}"
             object.__setattr__(
-                self, "name", f"fft-n{self.n}-{self.precision}"
+                self, "name", f"fft-n{self.n}-{self.precision}{suffix}"
             )
 
     @property
     def elem_bytes(self) -> int:
-        return COMPLEX_BYTES[self.precision]
+        """Per-point input bytes: complex for C2C, real (half) for R2C/C2R.
+
+        Non-pow2 real transforms fall back to the full C2C algorithm
+        (repro.fft.plan), so they pay — and are modelled at — complex
+        bytes.
+        """
+        full = COMPLEX_BYTES[self.precision]
+        if self.transform in ("r2c", "c2r") and is_pow2(self.n):
+            return full // 2
+        return full
 
     @property
     def n_fft(self) -> int:
+        """Eq. 6: transforms per batch — R2C fits 2x more per byte."""
         return max(int(self.batch_bytes // (self.n * self.elem_bytes)), 1)
 
 
@@ -105,17 +163,29 @@ def fft_workload(
     """
     n, b = case.n, case.elem_bytes
     n_fft = case.n_fft
+    # The packed R2C/C2R path only exists for pow2 lengths; non-pow2 real
+    # plans fall back to full C2C (and elem_bytes stays complex above).
+    real = case.transform in ("r2c", "c2r") and is_pow2(n)
+    # Real transforms run the packed N/2 complex transform; elem_bytes is
+    # already halved, so data_bytes (and every traffic term) halves too.
+    n_work = max(n // 2, 1) if real else n
     data_bytes = float(n) * b * n_fft
 
     if uses_bluestein(n):
-        # Bluestein: two forward + one inverse FFT of length M ~ 2N (pow2)
-        # plus three pointwise passes — roughly 3x the traffic and flops.
+        # Bluestein: one forward + one inverse FFT of length M ~ 2N (pow2;
+        # the filter spectrum is precomputed per length, repro.fft.bluestein)
+        # plus pointwise chirp passes.
         m = 1 << math.ceil(math.log2(2 * n - 1))
-        passes = 3 * plan_passes(m) + 1
-        flops = 3 * 5.0 * m * math.log2(m) * n_fft + 20.0 * n * n_fft
+        passes = 2 * plan_passes(m) + 1
+        flops = 2 * _butterfly_flops(m, case.radices) * n_fft \
+            + 20.0 * n * n_fft
+        stages = _stage_count(min(m, 2**13), case.radices)
     else:
-        passes = plan_passes(n)
-        flops = 5.0 * n * math.log2(n) * n_fft
+        passes = plan_passes(n_work)
+        flops = _butterfly_flops(n_work, case.radices) * n_fft
+        if real:
+            flops += 10.0 * (n_work + 1) * n_fft     # Hermitian split/merge
+        stages = _stage_count(min(n_work, 2**13), case.radices)
 
     hbm_bytes = 2.0 * data_bytes * passes          # read + write per pass
     peak = device.peak_flops * PRECISION_PEAK[case.precision]
@@ -123,8 +193,7 @@ def fft_workload(
     t_mem = hbm_bytes / device.hbm_bandwidth
     t_issue = flops / (peak * device.issue_efficiency)
     # Shared/VMEM traffic: every butterfly stage exchanges the working set.
-    stages = max(math.log2(max_pts := min(n, 2**13)), 1.0)
-    cache_bytes = 2.0 * data_bytes * stages / 3.0   # radix-8: log8(N) stages
+    cache_bytes = 2.0 * data_bytes * stages
     t_cache = cache_bytes / device.cache_bandwidth
     if regime_c:
         t_cache = max(t_cache, 1.02 * t_mem)

@@ -1,14 +1,19 @@
 """TPU-native FFT substrate: the paper's workload, reimplemented openly.
 
-  stockham     batched radix-2 Stockham autosort FFT (pure jnp, no gathers)
-  bluestein    arbitrary-length FFT via chirp-z (paper Sec. 2.1)
+  radix        mixed-radix schedules + memoised twiddle/split tables
+  stockham     batched mixed-radix Stockham FFT (pure jnp, no gathers)
+               with R2C/C2R real transforms
+  bluestein    arbitrary-length FFT via chirp-z (paper Sec. 2.1),
+               chirp/filter factors cached per length
   multidim     2-D/3-D transforms by axis decomposition (paper Eq. 2)
   distributed  pencil/four-step FFT across a device mesh (shard_map)
   pipeline     the paper's pulsar-search pipeline (Sec. 5.3)
+  plan         per-length algorithm choice + Pallas kernel routing
 """
 from repro.fft.bluestein import bluestein_fft
-from repro.fft.multidim import fft2
-from repro.fft.stockham import fft, ifft
-from repro.fft.plan import plan_for_length, FFTPlan
+from repro.fft.multidim import fft2, fftn, rfft2
+from repro.fft.stockham import fft, ifft, irfft, rfft
+from repro.fft.plan import plan_for_length, pow2_fft, FFTPlan
 
-__all__ = ["fft", "ifft", "fft2", "bluestein_fft", "plan_for_length", "FFTPlan"]
+__all__ = ["fft", "ifft", "rfft", "irfft", "fft2", "rfft2", "fftn",
+           "bluestein_fft", "plan_for_length", "pow2_fft", "FFTPlan"]

@@ -2,9 +2,10 @@
 
 The 2-D (and higher) DFT factorises into independent 1-D DFTs along each
 axis; cuFFT does exactly this (paper Sec. 2.1), so studying the 1-D
-transform covers the higher-dimensional cases.  We expose fft2/fftn built
-on the 1-D planner so every length class (pow2/four-step/Bluestein) is
-usable per axis.
+transform covers the higher-dimensional cases.  We expose fft2/fftn (and
+the real-input rfft2) built on the 1-D planner, so every length class
+(pow2/four-step/Bluestein) is usable per axis and every pow2 pass routes
+through the Pallas kernel (repro.fft.plan).
 """
 from __future__ import annotations
 
@@ -14,8 +15,8 @@ import jax.numpy as jnp
 from repro.fft.plan import plan_for_length
 
 
-def _fft_along(x: jax.Array, axis: int) -> jax.Array:
-    plan = plan_for_length(x.shape[axis])
+def _fft_along(x: jax.Array, axis: int, kind: str = "c2c") -> jax.Array:
+    plan = plan_for_length(x.shape[axis], kind)
     moved = jnp.moveaxis(x, axis, -1)
     return jnp.moveaxis(plan(moved), -1, axis)
 
@@ -24,6 +25,17 @@ def fft2(x: jax.Array, axes: tuple[int, int] = (-2, -1)) -> jax.Array:
     """2-D C2C FFT over ``axes`` (two sets of 1-D transforms, Eq. 2)."""
     a0, a1 = axes
     return _fft_along(_fft_along(x, a1), a0)
+
+
+def rfft2(x: jax.Array, axes: tuple[int, int] = (-2, -1)) -> jax.Array:
+    """2-D FFT of real input: R2C along the last axis, C2C along the other.
+
+    Matches ``jnp.fft.rfft2``: output has ``n // 2 + 1`` bins along
+    ``axes[1]``.  The R2C pass halves both FLOPs and HBM traffic of the
+    innermost (largest) transform set.
+    """
+    a0, a1 = axes
+    return _fft_along(_fft_along(x, a1, "r2c"), a0)
 
 
 def fftn(x: jax.Array, axes: tuple[int, ...] | None = None) -> jax.Array:

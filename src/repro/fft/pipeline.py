@@ -26,9 +26,14 @@ from repro.fft.plan import plan_for_length
 MAX_HARMONICS = 32
 
 
-def power_spectrum(spectrum: jax.Array) -> jax.Array:
-    """|X|^2 / N of an FFT output (batch, n)."""
-    n = spectrum.shape[-1]
+def power_spectrum(spectrum: jax.Array, n: int | None = None) -> jax.Array:
+    """|X|^2 / N of an FFT output (batch, n).
+
+    ``n`` overrides the normalisation length — pass the original transform
+    length when ``spectrum`` is an R2C half-spectrum (n/2+1 bins).
+    """
+    if n is None:
+        n = spectrum.shape[-1]
     return (spectrum.real**2 + spectrum.imag**2) / n
 
 
@@ -72,17 +77,25 @@ def candidate_snr(hsums: jax.Array, mean: jax.Array, std: jax.Array
     return (hsums - h * mean[..., None, :]) / (jnp.sqrt(h) * std[..., None, :])
 
 
-@functools.partial(jax.jit, static_argnames=("n_harmonics",))
-def pulsar_pipeline(x: jax.Array, n_harmonics: int = MAX_HARMONICS
-                    ) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("n_harmonics", "real_input"))
+def pulsar_pipeline(x: jax.Array, n_harmonics: int = MAX_HARMONICS,
+                    real_input: bool = False) -> jax.Array:
     """End-to-end pipeline on a batch of time series (batch, n).
 
     Returns the S/N spectra (batch, levels, n); a search would threshold
-    these for candidates.
+    these for candidates.  ``real_input=True`` runs the R2C plan instead —
+    telescope voltages are real, so the FFT stage does half the work and
+    the downstream stages see the n/2+1-bin half-spectrum (Sec. 5.3's
+    pipeline, at the cost model's ``r2c`` accounting).
     """
-    plan = plan_for_length(x.shape[-1])
-    spec = plan(x.astype(jnp.complex64))
-    p = power_spectrum(spec)
+    n = x.shape[-1]
+    if real_input:
+        plan = plan_for_length(n, "r2c")
+        spec = plan(jnp.real(x).astype(jnp.float32))
+    else:
+        plan = plan_for_length(n)
+        spec = plan(x.astype(jnp.complex64))
+    p = power_spectrum(spec, n)
     mean, std = spectrum_stats(p)
     hs = harmonic_sum(p, n_harmonics)
     return candidate_snr(hs, mean, std)
@@ -98,6 +111,7 @@ class PipelineShape:
     n: int
     n_harmonics: int = MAX_HARMONICS
     elem_bytes: int = 8          # complex64 input
+    real_input: bool = False     # R2C front end: half-spectrum downstream
 
 
 def stage_profiles(shape: PipelineShape, device: DeviceSpec
@@ -106,15 +120,22 @@ def stage_profiles(shape: PipelineShape, device: DeviceSpec
 
     Mirrors the paper's Sec. 5.3 accounting: with more harmonics summed,
     the non-FFT share grows and the composite saving shrinks (Table 4).
+    With ``real_input`` the FFT stage uses the R2C cost model (half the
+    FLOPs/traffic, Eq. 5/6 at N/2) and every downstream stage processes
+    the n/2+1-bin half-spectrum.
     """
     from repro.core.workloads import FFTCase, fft_workload
 
     b, n = shape.batch, shape.n
-    data = float(b * n)
+    transform = "r2c" if shape.real_input else "c2c"
+    elem = shape.elem_bytes // 2 if shape.real_input else shape.elem_bytes
+    # Downstream stages see n bins (C2C) or n/2+1 bins (R2C half-spectrum).
+    data = float(b * (n // 2 + 1 if shape.real_input else n))
 
     fft_prof = fft_workload(
-        FFTCase(n=n, precision="fp32", batch_bytes=data * shape.elem_bytes,
-                name="fft"),
+        FFTCase(n=n, precision="fp32",
+                batch_bytes=float(b * n) * elem,
+                transform=transform, name="fft"),
         device,
     )
 

@@ -1,36 +1,101 @@
-"""FFT planning — pick the algorithm per length, like cuFFT's planner.
+"""FFT planning — pick the algorithm and kernel route per length.
 
 The paper leans on cuFFT's dispatch (Cooley-Tukey for smooth lengths,
 Bluestein otherwise, multi-kernel plans for long transforms).  Our planner
 mirrors it:
 
-  pow2, fits one kernel   -> single fused Stockham pass
-  pow2, long              -> four-step decomposition (two passes + twiddle)
-  non-pow2                -> Bluestein (three pow2 FFTs)
+  pow2, fits one kernel   -> single fused Stockham pass (Pallas kernel)
+  pow2, long              -> four-step decomposition (two kernel passes
+                             + cached twiddle)
+  non-pow2                -> Bluestein (pow2 FFTs, cached chirp/filter)
+
+plus real-valued plans (``kind="r2c"``/``"c2r"``): N real points packed
+into an N/2 complex transform with a fused Hermitian split/merge — ~2x
+FLOP and HBM savings for real telescope voltages.
+
+**Routing**: every plan's power-of-two passes execute the fused Pallas
+kernel (``repro.kernels.fft``) via :func:`pow2_fft`, falling back to the
+pure-JAX Stockham engine when Pallas is unavailable (import failure, a
+lowering error, or ``REPRO_FFT_DISABLE_PALLAS=1``).  Tests monkeypatch
+the module-level ``_kernel_fft``/``_kernel_rfft``/``_kernel_irfft`` hooks
+to count kernel invocations or force the fallback.
 
 ``plan.passes`` feeds the DVFS workload model (HBM traffic = 2 bytes moved
 per pass), keeping the analytic model and the implementation consistent.
+All twiddle/chirp constants are memoised per length (here, in
+``repro.fft.radix`` and ``repro.fft.bluestein``), so planning and repeated
+pipeline builds never re-materialise them; the serving layer's
+``PlanSweepCache`` builds on the same memoisation.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import math
+import os
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.fft.bluestein import bluestein_fft
-from repro.fft.stockham import _stockham_pow2, fft as _fft
+from repro.fft.radix import DEFAULT_RADICES, radix_schedule, stage_count
+from repro.fft.stockham import (_as_complex, _irfft_merge, _pack_real,
+                                _rfft_split, _stockham_pow2, _unpack_real)
 
 # Longest transform a single fused pass keeps resident (complex64 in VMEM;
 # 2^13 c64 = 64 KiB per transform — matches the paper's single-kernel range).
 MAX_SINGLE_PASS = 2**13
 
+# ---------------------------------------------------------------------------
+# Pallas kernel routing (monkeypatchable hooks + env kill-switch)
+# ---------------------------------------------------------------------------
+
+try:
+    from repro.kernels.fft.ops import (MAX_KERNEL_N, fft_kernel_c2c,
+                                       fft_kernel_c2r, fft_kernel_r2c)
+    _kernel_fft: Callable | None = fft_kernel_c2c
+    _kernel_rfft: Callable | None = fft_kernel_r2c
+    _kernel_irfft: Callable | None = fft_kernel_c2r
+except Exception:                                     # pragma: no cover
+    MAX_KERNEL_N = MAX_SINGLE_PASS
+    _kernel_fft = _kernel_rfft = _kernel_irfft = None
+
+
+def _pallas_enabled() -> bool:
+    return os.environ.get("REPRO_FFT_DISABLE_PALLAS", "") not in ("1", "true")
+
+
+def pow2_fft(x: jax.Array, *, inverse: bool = False) -> jax.Array:
+    """C2C FFT of a pow2 length, routed through the Pallas kernel.
+
+    Single-kernel lengths run the fused mixed-radix kernel (pure-JAX
+    Stockham on fallback); longer lengths recurse through the four-step
+    decomposition so *every* pow2 pass of every plan lands on the kernel.
+    """
+    n = x.shape[-1]
+    if n > MAX_SINGLE_PASS:
+        if inverse:
+            return jnp.conj(pow2_fft(jnp.conj(x))) / n
+        n1, n2 = _four_step_split(n)
+        return four_step_fft(x, n1, n2)
+    kern = _kernel_fft
+    if kern is not None and n <= MAX_KERNEL_N and _pallas_enabled():
+        try:
+            return kern(x, inverse=inverse)
+        except Exception:                             # graceful fallback
+            pass
+    return _stockham_pow2(x, inverse=inverse)
+
 
 def _is_pow2(n: int) -> bool:
     return n > 0 and (n & (n - 1)) == 0
+
+
+def _four_step_split(n: int) -> tuple[int, int]:
+    n1 = 1 << (int(math.log2(n)) // 2)
+    return n1, n // n1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,22 +104,38 @@ class FFTPlan:
     algorithm: str              # "stockham" | "four-step" | "bluestein"
     passes: int                 # HBM read+write passes (DVFS model input)
     fn: Callable[[jax.Array], jax.Array]
+    kind: str = "c2c"           # "c2c" | "r2c" | "c2r"
+    stages: int = 0             # butterfly stages per fused pass
+    radices: tuple[int, ...] = ()
 
     def __call__(self, x: jax.Array) -> jax.Array:
         return self.fn(x)
+
+
+@functools.lru_cache(maxsize=None)
+def _four_step_twiddle(n1: int, n2: int) -> np.ndarray:
+    """The (n2, n1) inter-pass twiddle matrix, materialised once per shape.
+
+    complex128 so the x64 path keeps full precision; consumers cast to the
+    working dtype at trace time.
+    """
+    j = np.arange(n2)[:, None]
+    k = np.arange(n1)[None, :]
+    return np.exp(-2j * np.pi * (j * k) / (n1 * n2))
 
 
 def four_step_fft(x: jax.Array, n1: int, n2: int) -> jax.Array:
     """Long FFT as (n1 x n2) decomposition — Bailey's four-step algorithm.
 
     1. view as (n1, n2), FFT the columns (length n1, stride n2)
-    2. twiddle by exp(-2*pi*i*j*k/n)
+    2. twiddle by exp(-2*pi*i*j*k/n) — cached per (n1, n2)
     3. FFT the rows (length n2)
     4. read out transposed: out[k2*n1 + k1]
 
-    On a single device both inner FFTs are batched Stockham passes; the
-    distributed version (repro.fft.distributed) turns the transpose into an
-    all_to_all across the mesh — cuFFT's multi-kernel plan, TPU-style.
+    Both inner FFTs are batched pow2 passes routed through the Pallas
+    kernel (:func:`pow2_fft`); the distributed version
+    (repro.fft.distributed) turns the transpose into an all_to_all across
+    the mesh — cuFFT's multi-kernel plan, TPU-style.
     """
     n = n1 * n2
     assert x.shape[-1] == n
@@ -62,34 +143,109 @@ def four_step_fft(x: jax.Array, n1: int, n2: int) -> jax.Array:
     v = x.reshape(*batch, n1, n2)
     # columns: transpose so the transform axis is last, FFT, transpose back
     v = jnp.swapaxes(v, -1, -2)                 # (..., n2, n1)
-    v = _stockham_pow2(v)                        # FFT over n1
-    j = jnp.arange(n2)[:, None]
-    k = jnp.arange(n1)[None, :]
-    tw = jnp.exp(-2j * jnp.pi * (j * k) / n).astype(v.dtype)
+    v = pow2_fft(v)                              # FFT over n1
+    tw = jnp.asarray(_four_step_twiddle(n1, n2)).astype(v.dtype)
     v = v * tw
-    v = _stockham_pow2(jnp.swapaxes(v, -1, -2))  # (..., n1, n2), FFT over n2
+    v = pow2_fft(jnp.swapaxes(v, -1, -2))        # (..., n1, n2), FFT over n2
     out = jnp.swapaxes(v, -1, -2).reshape(*batch, n)
     return out
 
 
+# ---------------------------------------------------------------------------
+# Plan construction
+# ---------------------------------------------------------------------------
+
+def _c2c_fn(x: jax.Array) -> jax.Array:
+    return pow2_fft(_as_complex(x))
+
+
+def _r2c_fn(x: jax.Array, n: int) -> jax.Array:
+    """Routed R2C: fused kernel when the packed length fits, else pack ->
+    routed pow2 C2C -> split (so long real transforms still hit the kernel
+    once per four-step pass)."""
+    x = jnp.asarray(x)
+    if jnp.issubdtype(x.dtype, jnp.complexfloating):
+        x = x.real
+    m = n // 2
+    kern = _kernel_rfft
+    if (kern is not None and 4 <= n and m <= MAX_KERNEL_N
+            and _pallas_enabled()):
+        try:
+            return kern(x)
+        except Exception:
+            pass
+    if m < 1:
+        return _as_complex(x)
+    return _rfft_split(pow2_fft(_pack_real(x.astype(jnp.float32))), n)
+
+
+def _c2r_fn(x: jax.Array, n: int) -> jax.Array:
+    """Routed C2R inverse of :func:`_r2c_fn` (1/N normalised)."""
+    x = _as_complex(x)
+    m = n // 2
+    kern = _kernel_irfft
+    if (kern is not None and 4 <= n and m <= MAX_KERNEL_N
+            and _pallas_enabled()):
+        try:
+            return kern(x)
+        except Exception:
+            pass
+    return _unpack_real(pow2_fft(_irfft_merge(x, n), inverse=True))
+
+
 @functools.lru_cache(maxsize=None)
-def plan_for_length(n: int) -> FFTPlan:
+def plan_for_length(n: int, kind: str = "c2c") -> FFTPlan:
     """Build (or return the memoised) plan for length ``n``.
 
-    Plans are immutable and shape-keyed, so planning runs once per length
-    per process — the serving layer's plan cache builds on this, and
-    repeated pipeline construction never re-derives the decomposition.
+    ``kind`` selects the transform: ``"c2c"`` (default), ``"r2c"`` (real
+    input, N/2+1 bins out) or ``"c2r"`` (the inverse).  Plans are immutable
+    and shape-keyed, so planning runs once per (length, kind) per process —
+    the serving layer's plan cache builds on this, and repeated pipeline
+    construction never re-derives the decomposition or its twiddles.
     """
+    if kind not in ("c2c", "r2c", "c2r"):
+        raise ValueError(f"unknown transform kind {kind!r}")
+    if kind != "c2c":
+        return _real_plan(n, kind)
     if _is_pow2(n):
+        schedule = radix_schedule(min(n, MAX_SINGLE_PASS))
         if n <= MAX_SINGLE_PASS:
-            return FFTPlan(n, "stockham", 1, _fft)
-        n1 = 1 << (int(math.log2(n)) // 2)
-        n2 = n // n1
+            return FFTPlan(n, "stockham", 1, _c2c_fn,
+                           stages=len(schedule), radices=schedule)
+        n1, n2 = _four_step_split(n)
         return FFTPlan(
             n, "four-step", 2,
-            lambda x, n1=n1, n2=n2: four_step_fft(x, n1, n2),
+            lambda x, n1=n1, n2=n2: four_step_fft(_as_complex(x), n1, n2),
+            stages=stage_count(n1) + stage_count(n2),
+            radices=radix_schedule(n1),
         )
-    # Bluestein: 3 pow2 FFTs of length m >= 2n-1 plus pointwise passes.
+    # Bluestein: the filter-spectrum FFT is precomputed and cached per
+    # length (repro.fft.bluestein), so only 2 pow2 FFTs of length
+    # m >= 2n-1 run per call, plus pointwise chirp passes.
     m = 1 << (2 * n - 2).bit_length()
     inner = plan_for_length(m)
-    return FFTPlan(n, "bluestein", 3 * inner.passes + 1, bluestein_fft)
+    return FFTPlan(n, "bluestein", 2 * inner.passes + 1, bluestein_fft,
+                   stages=inner.stages, radices=inner.radices)
+
+
+def _real_plan(n: int, kind: str) -> FFTPlan:
+    if not _is_pow2(n):
+        if kind == "c2r":
+            raise ValueError(
+                f"c2r plans need a power-of-two length, got {n}")
+        # r2c fallback: full C2C plan + slice to the half spectrum.
+        inner = plan_for_length(n)
+        return FFTPlan(
+            n, inner.algorithm, inner.passes,
+            lambda x: inner.fn(_as_complex(x))[..., :n // 2 + 1],
+            kind="r2c", stages=inner.stages, radices=inner.radices)
+    m = max(n // 2, 1)
+    inner = plan_for_length(m) if m > 1 else None
+    passes = inner.passes if inner else 1
+    stages = inner.stages if inner else 0
+    radices = inner.radices if inner else ()
+    alg = inner.algorithm if inner else "stockham"
+    fn = (functools.partial(_r2c_fn, n=n) if kind == "r2c"
+          else functools.partial(_c2r_fn, n=n))
+    return FFTPlan(n, alg, passes, fn, kind=kind, stages=stages,
+                   radices=radices)

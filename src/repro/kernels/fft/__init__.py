@@ -1,3 +1,5 @@
-from repro.kernels.fft.ops import fft_kernel_c2c
+from repro.kernels.fft.ops import (MAX_KERNEL_N, fft_kernel_c2c,
+                                   fft_kernel_c2r, fft_kernel_r2c)
 
-__all__ = ["fft_kernel_c2c"]
+__all__ = ["MAX_KERNEL_N", "fft_kernel_c2c", "fft_kernel_r2c",
+           "fft_kernel_c2r"]

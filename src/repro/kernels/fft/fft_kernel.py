@@ -1,11 +1,11 @@
-"""Fused-stage Stockham FFT Pallas kernel.
+"""Fused-stage mixed-radix Stockham FFT Pallas kernel.
 
 TPU adaptation of the paper's single-kernel cuFFT plans (DESIGN.md Sec. 3):
 instead of a threadblock exchanging butterflies through shared memory, one
 Pallas program instance keeps a (TILE_B, N) tile of transforms resident in
-VMEM and runs **all** log2(N) Stockham stages before writing back.  HBM
-traffic is exactly one read + one write of the batch — the paper's ideal
-``t_i``-only case (Sec. 5: t_fix = t_i + t_o with t_o -> 0).
+VMEM and runs **all** Stockham stages before writing back.  HBM traffic is
+exactly one read + one write of the batch — the paper's ideal ``t_i``-only
+case (Sec. 5: t_fix = t_i + t_o with t_o -> 0).
 
 Layout notes:
   * complex data travels as separate (re, im) float32 arrays — TPU Pallas
@@ -14,12 +14,21 @@ Layout notes:
   * each stage reshapes the tile (TILE_B, L, M) -> split M -> stack; all
     affine, no gathers (the Stockham property), so Mosaic lowers them to
     vreg moves;
-  * twiddles are recomputed per stage with iota/cos/sin rather than loaded,
-    trading cheap VPU transcendentals for HBM bandwidth (the scarce
-    resource — the whole point of the paper is that this kernel is
-    memory-bound).
+  * the radix schedule comes from ``repro.fft.radix``: radix-4 stages with
+    a radix-2 tail by default (half the stages of the old radix-2 kernel),
+    radix-8 available via ``radices=(8, 4, 2)``;
+  * twiddles are **precomputed once per length** (host-side, memoised in
+    ``repro.fft.radix``) and streamed in as a packed (rows, N) table —
+    each grid step reads the table from its pinned VMEM window instead of
+    burning VPU transcendentals per stage; inverse transforms conjugate
+    the table in-register (negate the im plane);
+  * R2C packs N real points as N/2 complex, runs the half-length stage
+    pipeline, and applies the Hermitian split *inside the kernel* — one
+    HBM read of N floats and one write of N/2+1 complex pairs, ~2x less
+    traffic than C2C at the same N.  C2R is the exact mirror.
 
-Grid: 1-D over batch tiles.  BlockSpec pins a (TILE_B, N) window in VMEM.
+Grid: 1-D over batch tiles.  BlockSpec pins a (TILE_B, N) data window and
+the whole twiddle table in VMEM.
 """
 from __future__ import annotations
 
@@ -29,29 +38,78 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.fft.radix import (DEFAULT_RADICES, dft_matrix,
+                             packed_stage_twiddles, radix_schedule,
+                             rfft_split_twiddles)
 
-def _stockham_stages(re, im, n: int, *, inverse: bool):
-    """Run all radix-2 Stockham DIF stages on a (B, N) re/im tile pair."""
+
+def _cmul(ar, ai, br, bi):
+    """Complex multiply on split planes: (ar + i*ai) * (br + i*bi)."""
+    return ar * br - ai * bi, ar * bi + ai * br
+
+
+def _mixed_radix_stages(re, im, n: int, twr, twi, *,
+                        radices: tuple[int, ...], inverse: bool):
+    """Run the full radix schedule on a (B, N) re/im tile pair.
+
+    ``twr``/``twi`` is the packed forward twiddle table from
+    :func:`repro.fft.radix.packed_stage_twiddles`; inverse transforms
+    negate the im plane (conjugation) in-register.
+    """
     b = re.shape[0]
+    if n == 1:
+        return re, im
     sign = 1.0 if inverse else -1.0
+    if inverse:
+        twi = -twi
     re = re.reshape(b, 1, n)
     im = im.reshape(b, 1, n)
-    l, m = 1, n
-    while m > 1:
-        h = m // 2
-        ar, ai = re[..., :h], im[..., :h]
-        br, bi = re[..., h:], im[..., h:]
-        # twiddle w_j = exp(sign * i*pi*j/h), j broadcast over (B, L, h)
-        j = jax.lax.broadcasted_iota(jnp.float32, (b, l, h), 2)
-        ang = sign * jnp.pi * j / h
-        wr, wi = jnp.cos(ang), jnp.sin(ang)
-        er, ei = ar + br, ai + bi                  # even outputs
-        dr, di = ar - br, ai - bi
-        orr = dr * wr - di * wi                    # odd = (a-b) * w
-        oi = dr * wi + di * wr
-        re = jnp.stack([er, orr], axis=1).reshape(b, 2 * l, h)
-        im = jnp.stack([ei, oi], axis=1).reshape(b, 2 * l, h)
-        l, m = 2 * l, h
+    l, m, row = 1, n, 0
+    for r in radix_schedule(n, radices):
+        h = m // r
+        ws = [(twr[row + k, :h].reshape(1, 1, h),
+               twi[row + k, :h].reshape(1, 1, h)) for k in range(r - 1)]
+        parts = [(re[..., p * h:(p + 1) * h], im[..., p * h:(p + 1) * h])
+                 for p in range(r)]
+        if r == 2:
+            (ar, ai), (br, bi) = parts
+            outs = [(ar + br, ai + bi)]
+            branches = [(ar - br, ai - bi)]
+        elif r == 4:
+            (x0r, x0i), (x1r, x1i), (x2r, x2i), (x3r, x3i) = parts
+            t0r, t0i = x0r + x2r, x0i + x2i
+            t1r, t1i = x0r - x2r, x0i - x2i
+            t2r, t2i = x1r + x3r, x1i + x3i
+            t3r, t3i = x1r - x3r, x1i - x3i
+            # b1/b3 = t1 -+ i*t3 (forward); sign flips for the inverse.
+            u3r, u3i = -sign * t3i, sign * t3r          # sign * i * t3
+            outs = [(t0r + t2r, t0i + t2i)]
+            branches = [(t1r + u3r, t1i + u3i),
+                        (t0r - t2r, t0i - t2i),
+                        (t1r - u3r, t1i - u3i)]
+        else:
+            # Generic butterfly via the radix-r DFT matrix (radix-8 path).
+            dft = dft_matrix(r, inverse)
+            outs = [(functools.reduce(lambda a, p: a + p[0],
+                                      parts[1:], parts[0][0]),
+                     functools.reduce(lambda a, p: a + p[1],
+                                      parts[1:], parts[0][1]))]
+            branches = []
+            for k in range(1, r):
+                accr, acci = parts[0]
+                for p in range(1, r):
+                    cr, ci = float(dft[p, k].real), float(dft[p, k].imag)
+                    pr, pi = parts[p]
+                    accr = accr + pr * cr - pi * ci
+                    acci = acci + pr * ci + pi * cr
+                branches.append((accr, acci))
+        for k, (vr, vi) in enumerate(branches):
+            wr, wi = ws[k]
+            outs.append(_cmul(vr, vi, wr, wi))
+        re = jnp.stack([o[0] for o in outs], axis=1).reshape(b, r * l, h)
+        im = jnp.stack([o[1] for o in outs], axis=1).reshape(b, r * l, h)
+        row += r - 1
+        l, m = r * l, h
     re = re.reshape(b, n)
     im = im.reshape(b, n)
     if inverse:
@@ -59,32 +117,146 @@ def _stockham_stages(re, im, n: int, *, inverse: bool):
     return re, im
 
 
-def _fft_body(re_ref, im_ref, out_re_ref, out_im_ref, *, n: int,
-              inverse: bool):
-    re = re_ref[...]
-    im = im_ref[...]
-    out_re, out_im = _stockham_stages(re, im, n, inverse=inverse)
+def _c2c_body(re_ref, im_ref, twr_ref, twi_ref, out_re_ref, out_im_ref, *,
+              n: int, radices: tuple[int, ...], inverse: bool):
+    out_re, out_im = _mixed_radix_stages(
+        re_ref[...], im_ref[...], n, twr_ref[...], twi_ref[...],
+        radices=radices, inverse=inverse)
     out_re_ref[...] = out_re
     out_im_ref[...] = out_im
 
 
+def _r2c_body(x_ref, twr_ref, twi_ref, swr_ref, swi_ref,
+              out_re_ref, out_im_ref, *, n: int, radices: tuple[int, ...]):
+    """Packed R2C: N reals -> N/2 complex FFT -> Hermitian split, fused."""
+    x = x_ref[...]
+    b = x.shape[0]
+    m = n // 2
+    v = x.reshape(b, m, 2)
+    zr, zi = _mixed_radix_stages(v[..., 0], v[..., 1], m,
+                                 twr_ref[...], twi_ref[...],
+                                 radices=radices, inverse=False)
+    fr = jnp.concatenate([zr, zr[:, :1]], axis=1)      # wrap Z[m] = Z[0]
+    fi = jnp.concatenate([zi, zi[:, :1]], axis=1)
+    rr, ri = fr[:, ::-1], -fi[:, ::-1]                 # conj(Z[m-k])
+    dr, di = fr - rr, fi - ri
+    qr, qi = 0.5 * di, -0.5 * dr                       # Zo = -i/2 * d
+    wr = swr_ref[...].reshape(1, m + 1)
+    wi = swi_ref[...].reshape(1, m + 1)
+    pr, pi = _cmul(qr, qi, wr, wi)
+    out_re_ref[...] = 0.5 * (fr + rr) + pr             # X = Ze + W * Zo
+    out_im_ref[...] = 0.5 * (fi + ri) + pi
+
+
+def _c2r_body(xr_ref, xi_ref, twr_ref, twi_ref, swr_ref, swi_ref,
+              out_ref, *, n: int, radices: tuple[int, ...]):
+    """Packed C2R: Hermitian merge -> N/2 inverse FFT -> interleave."""
+    ar, ai = xr_ref[...], xi_ref[...]                  # (tb, m+1)
+    b = ar.shape[0]
+    m = n // 2
+    rr, ri = ar[:, ::-1], -ai[:, ::-1]                 # conj(X[m-k])
+    er, ei = 0.5 * (ar + rr), 0.5 * (ai + ri)          # Ze (k = 0..m)
+    dr, di = ar - rr, ai - ri
+    wr = swr_ref[...].reshape(1, m + 1)
+    wi = -swi_ref[...].reshape(1, m + 1)               # conj(W)
+    qr, qi = _cmul(0.5 * dr, 0.5 * di, wr, wi)         # Zo
+    zr = (er - qi)[:, :m]                              # Z = Ze + i * Zo
+    zi = (ei + qr)[:, :m]
+    zr, zi = _mixed_radix_stages(zr, zi, m, twr_ref[...], twi_ref[...],
+                                 radices=radices, inverse=True)
+    out_ref[...] = jnp.stack([zr, zi], axis=-1).reshape(b, n)
+
+
+def _tables(n: int, radices: tuple[int, ...]):
+    """Packed stage-twiddle constants + their broadcast BlockSpec."""
+    twr, twi = packed_stage_twiddles(n, radices)
+    spec = pl.BlockSpec(twr.shape, lambda i: (0, 0))
+    return jnp.asarray(twr), jnp.asarray(twi), spec
+
+
+def _split_tables(n: int):
+    w = rfft_split_twiddles(n)
+    swr = jnp.asarray(w.real, jnp.float32).reshape(1, -1)
+    swi = jnp.asarray(w.imag, jnp.float32).reshape(1, -1)
+    spec = pl.BlockSpec((1, n // 2 + 1), lambda i: (0, 0))
+    return swr, swi, spec
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("tile_b", "inverse", "interpret"))
+                   static_argnames=("tile_b", "inverse", "interpret",
+                                    "radices"))
 def fft_pallas(re: jax.Array, im: jax.Array, *, tile_b: int = 8,
-               inverse: bool = False, interpret: bool = False):
+               inverse: bool = False, interpret: bool = False,
+               radices: tuple[int, ...] = DEFAULT_RADICES):
     """Batched pow2 C2C FFT over the last axis; (B, N) re/im in, same out."""
     b, n = re.shape
     assert n & (n - 1) == 0, f"pow2 lengths only, got {n}"
     assert b % tile_b == 0, (b, tile_b)
+    if n == 1:
+        return re, im
     grid = (b // tile_b,)
     spec = pl.BlockSpec((tile_b, n), lambda i: (i, 0))
+    twr, twi, tw_spec = _tables(n, radices)
     out_shape = [jax.ShapeDtypeStruct((b, n), re.dtype)] * 2
     fn = pl.pallas_call(
-        functools.partial(_fft_body, n=n, inverse=inverse),
+        functools.partial(_c2c_body, n=n, radices=radices, inverse=inverse),
         grid=grid,
-        in_specs=[spec, spec],
+        in_specs=[spec, spec, tw_spec, tw_spec],
         out_specs=[spec, spec],
         out_shape=out_shape,
         interpret=interpret,
     )
-    return fn(re, im)
+    return fn(re, im, twr, twi)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_b", "interpret", "radices"))
+def rfft_pallas(x: jax.Array, *, tile_b: int = 8, interpret: bool = False,
+                radices: tuple[int, ...] = DEFAULT_RADICES):
+    """Batched pow2 R2C FFT: (B, N) f32 in, (B, N/2+1) re/im out."""
+    b, n = x.shape
+    assert n & (n - 1) == 0 and n >= 4, f"pow2 N >= 4 only, got {n}"
+    assert b % tile_b == 0, (b, tile_b)
+    m = n // 2
+    grid = (b // tile_b,)
+    in_spec = pl.BlockSpec((tile_b, n), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((tile_b, m + 1), lambda i: (i, 0))
+    twr, twi, tw_spec = _tables(m, radices)
+    swr, swi, sw_spec = _split_tables(n)
+    out_shape = [jax.ShapeDtypeStruct((b, m + 1), x.dtype)] * 2
+    fn = pl.pallas_call(
+        functools.partial(_r2c_body, n=n, radices=radices),
+        grid=grid,
+        in_specs=[in_spec, tw_spec, tw_spec, sw_spec, sw_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(x, twr, twi, swr, swi)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_b", "interpret", "radices"))
+def irfft_pallas(re: jax.Array, im: jax.Array, *, tile_b: int = 8,
+                 interpret: bool = False,
+                 radices: tuple[int, ...] = DEFAULT_RADICES):
+    """Batched pow2 C2R inverse: (B, N/2+1) re/im in, (B, N) f32 out."""
+    b, m1 = re.shape
+    m = m1 - 1
+    n = 2 * m
+    assert n & (n - 1) == 0 and n >= 4, f"pow2 N >= 4 only, got {n}"
+    assert b % tile_b == 0, (b, tile_b)
+    grid = (b // tile_b,)
+    in_spec = pl.BlockSpec((tile_b, m + 1), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((tile_b, n), lambda i: (i, 0))
+    twr, twi, tw_spec = _tables(m, radices)
+    swr, swi, sw_spec = _split_tables(n)
+    fn = pl.pallas_call(
+        functools.partial(_c2r_body, n=n, radices=radices),
+        grid=grid,
+        in_specs=[in_spec, in_spec, tw_spec, tw_spec, sw_spec, sw_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((b, n), re.dtype),
+        interpret=interpret,
+    )
+    return fn(re, im, twr, twi, swr, swi)

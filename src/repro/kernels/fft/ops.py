@@ -1,18 +1,51 @@
-"""Public jit'd wrapper for the fused Stockham FFT kernel."""
+"""Public jit'd wrappers for the fused mixed-radix Stockham FFT kernel."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.fft.radix import DEFAULT_RADICES
 from repro.kernels.common import batch_tile, use_interpret
-from repro.kernels.fft.fft_kernel import fft_pallas
+from repro.kernels.fft.fft_kernel import fft_pallas, irfft_pallas, rfft_pallas
 
 # One fused pass handles transforms that fit VMEM alongside work buffers.
 MAX_KERNEL_N = 2**13
 
 
+def _check_kernel_length(n: int) -> None:
+    if n > MAX_KERNEL_N:
+        raise ValueError(
+            f"N={n} exceeds the single-pass kernel limit ({MAX_KERNEL_N}); "
+            "route long transforms through repro.fft.plan (its four-step "
+            "decomposition runs this kernel once per pow2 pass)")
+
+
+def _flatten(x: jax.Array) -> tuple[jax.Array, tuple[int, ...], int]:
+    """Collapse leading dims to one batch axis: (..., n) -> (b, n)."""
+    lead = x.shape[:-1]
+    b = 1
+    for d in lead:
+        b *= d
+    return x.reshape(b, x.shape[-1]), lead, b
+
+
+def _tile_and_pad(planes: list[jax.Array], b: int, n: int,
+                  elem_bytes: int = 4) -> tuple[list[jax.Array], int]:
+    """Pick a batch tile and pad only when the batch is not a multiple.
+
+    A tile-multiple batch (the common case after the serving layer's
+    coalescer) skips the pad-then-slice HBM round trip entirely.
+    """
+    tile = min(batch_tile(n, elem_bytes, buffers=8), b)
+    pad = (-b) % tile
+    if pad:
+        planes = [jnp.pad(p, ((0, pad), (0, 0))) for p in planes]
+    return planes, tile
+
+
 def fft_kernel_c2c(x: jax.Array, *, inverse: bool = False,
-                   interpret: bool | None = None) -> jax.Array:
+                   interpret: bool | None = None,
+                   radices: tuple[int, ...] = DEFAULT_RADICES) -> jax.Array:
     """Batched pow2 C2C FFT (..., N) via the Pallas kernel.
 
     Accepts complex input, splits to re/im planes for the kernel, and
@@ -25,22 +58,70 @@ def fft_kernel_c2c(x: jax.Array, *, inverse: bool = False,
     if not jnp.issubdtype(x.dtype, jnp.complexfloating):
         x = x.astype(jnp.complex64)
     n = x.shape[-1]
-    assert n <= MAX_KERNEL_N, (
-        f"N={n} exceeds the single-pass kernel; use repro.fft.plan")
-    lead = x.shape[:-1]
-    b = 1
-    for d in lead:
-        b *= d
-    re = x.real.reshape(b, n).astype(jnp.float32)
-    im = x.imag.reshape(b, n).astype(jnp.float32)
-
-    tile = min(batch_tile(n, 4, buffers=6), b)
-    # pad batch to a tile multiple
-    pad = (-b) % tile
-    if pad:
-        re = jnp.pad(re, ((0, pad), (0, 0)))
-        im = jnp.pad(im, ((0, pad), (0, 0)))
+    _check_kernel_length(n)
+    if n == 1:
+        return x if not inverse else x / 1
+    flat, lead, b = _flatten(x)
+    re = flat.real.astype(jnp.float32)
+    im = flat.imag.astype(jnp.float32)
+    (re, im), tile = _tile_and_pad([re, im], b, n)
     out_re, out_im = fft_pallas(re, im, tile_b=tile, inverse=inverse,
-                                interpret=interpret)
-    out = out_re[:b] + 1j * out_im[:b]
+                                interpret=interpret, radices=radices)
+    if out_re.shape[0] != b:
+        out_re, out_im = out_re[:b], out_im[:b]
+    return (out_re + 1j * out_im).reshape(*lead, n)
+
+
+def fft_kernel_r2c(x: jax.Array, *, interpret: bool | None = None,
+                   radices: tuple[int, ...] = DEFAULT_RADICES) -> jax.Array:
+    """Batched pow2 R2C FFT: (..., N) real -> (..., N/2+1) complex.
+
+    Packs N reals as N/2 complex points, so it accepts N up to
+    2 * MAX_KERNEL_N; the Hermitian split runs fused inside the kernel.
+    """
+    if interpret is None:
+        interpret = use_interpret()
+    x = jnp.asarray(x)
+    if jnp.issubdtype(x.dtype, jnp.complexfloating):
+        x = x.real
+    n = x.shape[-1]
+    _check_kernel_length(max(n // 2, 1))
+    if n < 4:
+        from repro.fft.stockham import rfft
+        return rfft(x)
+    flat, lead, b = _flatten(x.astype(jnp.float32))
+    (flat,), tile = _tile_and_pad([flat], b, n)
+    out_re, out_im = rfft_pallas(flat, tile_b=tile, interpret=interpret,
+                                 radices=radices)
+    if out_re.shape[0] != b:
+        out_re, out_im = out_re[:b], out_im[:b]
+    return (out_re + 1j * out_im).reshape(*lead, n // 2 + 1)
+
+
+def fft_kernel_c2r(x: jax.Array, *, interpret: bool | None = None,
+                   radices: tuple[int, ...] = DEFAULT_RADICES) -> jax.Array:
+    """Batched pow2 C2R inverse: (..., N/2+1) half-spectrum -> (..., N) real.
+
+    The exact inverse of :func:`fft_kernel_r2c` (1/N normalised, matching
+    ``jnp.fft.irfft``).
+    """
+    if interpret is None:
+        interpret = use_interpret()
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.complexfloating):
+        x = x.astype(jnp.complex64)
+    m = x.shape[-1] - 1
+    n = 2 * m
+    _check_kernel_length(max(m, 1))
+    if n < 4:
+        from repro.fft.stockham import irfft
+        return irfft(x)
+    flat, lead, b = _flatten(x)
+    re = flat.real.astype(jnp.float32)
+    im = flat.imag.astype(jnp.float32)
+    (re, im), tile = _tile_and_pad([re, im], b, n)
+    out = irfft_pallas(re, im, tile_b=tile, interpret=interpret,
+                       radices=radices)
+    if out.shape[0] != b:
+        out = out[:b]
     return out.reshape(*lead, n)

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the FFT kernel."""
+"""Pure-jnp oracles for the FFT kernels."""
 from __future__ import annotations
 
 import jax
@@ -10,3 +10,15 @@ def fft_ref(re: jax.Array, im: jax.Array, *, inverse: bool = False):
     x = re.astype(jnp.complex64) + 1j * im.astype(jnp.complex64)
     y = jnp.fft.ifft(x, axis=-1) if inverse else jnp.fft.fft(x, axis=-1)
     return y.real.astype(re.dtype), y.imag.astype(im.dtype)
+
+
+def rfft_ref(x: jax.Array):
+    """R2C reference: (..., n) real -> (..., n/2+1) re/im planes."""
+    y = jnp.fft.rfft(x.astype(jnp.float32), axis=-1)
+    return y.real.astype(jnp.float32), y.imag.astype(jnp.float32)
+
+
+def irfft_ref(re: jax.Array, im: jax.Array):
+    """C2R reference: (..., n/2+1) re/im planes -> (..., n) real."""
+    x = re.astype(jnp.complex64) + 1j * im.astype(jnp.complex64)
+    return jnp.fft.irfft(x, axis=-1).astype(jnp.float32)

@@ -16,7 +16,6 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.energy import ffts_per_batch
-from repro.core.workloads import COMPLEX_BYTES
 from repro.serving.request import FFTRequest, ShapeKey
 
 
@@ -34,8 +33,9 @@ class Batch:
 
     @property
     def bytes(self) -> int:
-        """Payload footprint at the batch's complex precision."""
-        return self.n_transforms * self.key.n * COMPLEX_BYTES[self.key.precision]
+        """Payload footprint at the batch's executed precision (real for
+        pow2 r2c payloads, complex otherwise)."""
+        return self.n_transforms * self.key.n * self.key.elem_bytes
 
     @property
     def latency_budget(self) -> float | None:
@@ -65,7 +65,9 @@ def coalesce(
     batches: list[Batch] = []
     next_id = start_id
     for key in order:
-        cap = ffts_per_batch(batch_bytes, key.n, COMPLEX_BYTES[key.precision])
+        # Eq. 6 cap at the bytes the batch will actually occupy: pow2 r2c
+        # payloads execute as real arrays, so twice as many fit.
+        cap = ffts_per_batch(batch_bytes, key.n, key.elem_bytes)
         current: list[FFTRequest] = []
         count = 0
         for req in groups[key]:

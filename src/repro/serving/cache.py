@@ -115,10 +115,17 @@ class PlanSweepCache:
 
     def _build_fft(self, key: ShapeKey):
         self.stats.plan_builds += 1
-        plan = self._plan_fn(key.n)
+        # The injectable plan_fn keeps its historical (n) signature for
+        # C2C; real transforms pass the kind through plan_for_length-style
+        # two-argument callables.
+        if key.transform == "c2c":
+            plan = self._plan_fn(key.n)
+        else:
+            plan = self._plan_fn(key.n, key.transform)
         fn = jax.jit(plan.fn)
         case = FFTCase(n=key.n, precision=key.precision,
-                       batch_bytes=self.batch_bytes)
+                       batch_bytes=self.batch_bytes,
+                       transform=key.transform)
         profile = fft_workload(case, self.device)
         return plan, fn, profile, case.n_fft
 

@@ -34,6 +34,21 @@ class ShapeKey:
     precision: str
     n_harmonics: int = 0            # pulsar requests only; 0 for plain FFTs
     device: str = ""
+    transform: str = "c2c"          # "c2c" | "r2c" — distinct plans + sweeps
+
+    @property
+    def elem_bytes(self) -> int:
+        """Per-point device bytes of this shape's payload.
+
+        R2C payloads at pow2 lengths execute as real arrays — half the
+        complex footprint, so Eq. 6 fits twice as many per batch.  Non-pow2
+        r2c falls back to the full C2C algorithm (repro.fft.plan), so it
+        pays complex bytes and must be capped accordingly.
+        """
+        full = COMPLEX_BYTES[self.precision]
+        if self.transform == "r2c" and self.n & (self.n - 1) == 0:
+            return full // 2
+        return full
 
 
 @dataclasses.dataclass
@@ -45,6 +60,7 @@ class FFTRequest:
     kind: str = KIND_FFT
     latency_budget: float | None = None  # max tolerable slowdown vs boost
     n_harmonics: int = 32                # pulsar kind only
+    transform: str = "c2c"               # "c2c" or "r2c" (real payloads)
     request_id: int = dataclasses.field(
         default_factory=lambda: next(_REQUEST_IDS))
     t_enqueue: float = 0.0               # stamped by the service
@@ -56,6 +72,9 @@ class FFTRequest:
                 f"have {sorted(COMPLEX_BYTES)}")
         if self.kind not in (KIND_FFT, KIND_PULSAR):
             raise ValueError(f"unknown request kind {self.kind!r}")
+        if self.transform not in ("c2c", "r2c"):
+            raise ValueError(f"unknown transform {self.transform!r}; "
+                             "have ('c2c', 'r2c')")
         # Reject malformed payloads at submit time so one bad request can
         # never poison a whole serving cycle.
         ndim = getattr(self.x, "ndim", None)
@@ -75,14 +94,19 @@ class FFTRequest:
 
     @property
     def bytes(self) -> int:
-        """Device bytes of the request payload at its complex precision."""
-        return self.batch * self.n * COMPLEX_BYTES[self.precision]
+        """Device bytes of the request payload at its precision.
+
+        Real (r2c) payloads at pow2 lengths are half the size of complex
+        ones — Eq. 6 packs twice as many of them per memory-budgeted
+        batch (see :meth:`ShapeKey.elem_bytes` for the non-pow2 caveat).
+        """
+        return self.batch * self.n * self.shape_key("").elem_bytes
 
     def shape_key(self, device_name: str) -> ShapeKey:
         return ShapeKey(
             kind=self.kind, n=self.n, precision=self.precision,
             n_harmonics=self.n_harmonics if self.kind == KIND_PULSAR else 0,
-            device=device_name)
+            device=device_name, transform=self.transform)
 
 
 @dataclasses.dataclass

@@ -41,6 +41,10 @@ from repro.serving.request import (KIND_FFT, KIND_PULSAR, FFTRequest,
 
 _EXEC_DTYPE = {"fp16": jnp.complex64, "fp32": jnp.complex64,
                "fp64": jnp.complex128}
+# Real execution dtypes for R2C payloads — stacking them as complex would
+# double the device bytes and forfeit the R2C saving the receipts report.
+_REAL_EXEC_DTYPE = {"fp16": jnp.float32, "fp32": jnp.float32,
+                    "fp64": jnp.float64}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,15 +153,18 @@ class FFTService:
         kind: str = KIND_FFT,
         latency_budget: float | None = None,
         n_harmonics: int = 32,
+        transform: str = "c2c",
     ) -> FFTRequest:
         """Enqueue one request (a (batch, n) or (n,) array); returns it.
 
+        ``transform="r2c"`` serves real payloads through the R2C plan —
+        half the energy per transform at the same length (Eq. 5/6).
         The request's receipt becomes available after the next drain():
         ``service.receipt(request)``.
         """
         req = FFTRequest(x=jnp.asarray(x), precision=precision, kind=kind,
                          latency_budget=latency_budget,
-                         n_harmonics=n_harmonics)
+                         n_harmonics=n_harmonics, transform=transform)
         req.t_enqueue = self._timer()
         self._pending.append(req)
         return req
@@ -212,6 +219,8 @@ class FFTService:
         rows = [jnp.atleast_2d(r.x) for r in batch.requests]
         x = jnp.concatenate(rows, axis=0) if len(rows) > 1 else rows[0]
         if batch.key.kind == KIND_FFT:
+            if batch.key.transform == "r2c":
+                return x.real.astype(_REAL_EXEC_DTYPE[batch.key.precision])
             return x.astype(_EXEC_DTYPE[batch.key.precision])
         # The pulsar pipeline consumes real time series.
         return x.real.astype(jnp.float32)

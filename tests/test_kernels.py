@@ -7,8 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.fft.ops import fft_kernel_c2c
-from repro.kernels.fft.ref import fft_ref
+from repro.kernels.fft.ops import (MAX_KERNEL_N, fft_kernel_c2c,
+                                   fft_kernel_c2r, fft_kernel_r2c)
+from repro.kernels.fft.ref import fft_ref, irfft_ref, rfft_ref
 from repro.kernels.harmonic_sum.ops import harmonic_sum_kernel
 from repro.kernels.harmonic_sum.ref import harmonic_sum_ref
 from repro.kernels.spectrum.ops import power_spectrum_stats_kernel
@@ -50,6 +51,67 @@ class TestFFTKernel:
         got = fft_kernel_c2c(x, interpret=True)
         np.testing.assert_allclose(got, jnp.fft.fft(x.astype(jnp.complex64)),
                                    rtol=3e-4, atol=3e-4)
+
+    @pytest.mark.parametrize("radices", [(2,), (4, 2), (8, 4, 2)])
+    def test_radix_schedules_match_oracle(self, radices):
+        """The kernel's specialised r=2/r=4 and generic r=8 butterflies."""
+        x = rand_c((4, 1024))
+        got = fft_kernel_c2c(x, interpret=True, radices=radices)
+        np.testing.assert_allclose(got, jnp.fft.fft(x), rtol=3e-4, atol=3e-4)
+
+    def test_too_long_raises_with_plan_pointer(self):
+        x = rand_c((1, 2 * MAX_KERNEL_N))
+        with pytest.raises(ValueError, match="repro.fft.plan"):
+            fft_kernel_c2c(x, interpret=True)
+
+    def test_tile_multiple_batch_skips_padding(self, monkeypatch):
+        """A tile-multiple batch must not pay the pad-then-slice trip."""
+        import repro.kernels.fft.ops as ops
+        called = []
+        real_pad = jnp.pad
+        monkeypatch.setattr(ops.jnp, "pad",
+                            lambda *a, **k: called.append(1) or real_pad(*a, **k))
+        x = rand_c((8, 256))          # 8 <= tile -> tile=8, pad=0
+        got = fft_kernel_c2c(x, interpret=True)
+        np.testing.assert_allclose(got, jnp.fft.fft(x), rtol=3e-4, atol=3e-4)
+        assert not called
+
+
+class TestRealFFTKernels:
+    @pytest.mark.parametrize("n", [8, 64, 512, 2048, 8192, 2 * MAX_KERNEL_N])
+    @pytest.mark.parametrize("batch", [1, 4, 13])
+    def test_r2c_matches_oracle(self, n, batch):
+        """R2C accepts up to 2*MAX_KERNEL_N (it packs to N/2 complex)."""
+        x = jax.random.normal(KEY, (batch, n), jnp.float32)
+        got = fft_kernel_r2c(x, interpret=True)
+        re, im = rfft_ref(x)
+        np.testing.assert_allclose(got, re + 1j * im, rtol=3e-4, atol=2e-3)
+
+    @pytest.mark.parametrize("n", [8, 256, 4096])
+    def test_c2r_matches_oracle(self, n):
+        x = rand_c((3, n // 2 + 1))
+        # a valid half-spectrum: endpoints real (Hermitian consistency)
+        x = x.at[:, 0].set(x[:, 0].real).at[:, -1].set(x[:, -1].real)
+        got = fft_kernel_c2r(x, interpret=True)
+        np.testing.assert_allclose(got, irfft_ref(x.real, x.imag),
+                                   rtol=3e-4, atol=2e-3)
+
+    @pytest.mark.parametrize("n", [64, 1024])
+    def test_r2c_c2r_roundtrip(self, n):
+        x = jax.random.normal(KEY, (5, n), jnp.float32)
+        back = fft_kernel_c2r(fft_kernel_r2c(x, interpret=True),
+                              interpret=True)
+        np.testing.assert_allclose(back, x, rtol=3e-4, atol=2e-3)
+
+    def test_small_n_falls_back(self):
+        x = jax.random.normal(KEY, (4, 2), jnp.float32)
+        np.testing.assert_allclose(fft_kernel_r2c(x, interpret=True),
+                                   jnp.fft.rfft(x), rtol=3e-4, atol=3e-4)
+
+    def test_r2c_too_long_raises(self):
+        x = jax.random.normal(KEY, (1, 4 * MAX_KERNEL_N), jnp.float32)
+        with pytest.raises(ValueError, match="repro.fft.plan"):
+            fft_kernel_r2c(x, interpret=True)
 
 
 class TestHarmonicSumKernel:

@@ -194,6 +194,44 @@ def test_service_results_match_oracle():
     assert rep.joules_per_transform > 0
 
 
+def test_r2c_batches_execute_real_and_pack_double():
+    """R2C payloads stack as real arrays (half the device bytes) and the
+    Eq. 6 coalescer fits twice as many of them per memory budget."""
+    n = 256
+    budget = 8 * n * COMPLEX_BYTES["fp32"]        # 8 complex transforms
+    xr = jax.random.normal(KEY, (4, n))
+    reqs_c = [FFTRequest(x=rand_complex((4, n))) for _ in range(4)]
+    reqs_r = [FFTRequest(x=xr, transform="r2c") for _ in range(4)]
+    b_c = coalesce(reqs_c, device_name="d", batch_bytes=budget)
+    b_r = coalesce(reqs_r, device_name="d", batch_bytes=budget)
+    assert len(b_c) == 2 and len(b_r) == 1        # 16 real transforms fit
+    assert b_r[0].bytes == b_c[0].bytes           # same footprint, 2x work
+    # and the executor stacks the r2c batch as a real array
+    svc = FFTService(TPU_V5E)
+    svc.submit(xr, transform="r2c")
+    stacked = svc._stack(coalesce(svc._pending, device_name=TPU_V5E.name,
+                                  batch_bytes=budget)[0])
+    assert stacked.dtype == jnp.float32
+
+
+def test_service_r2c_requests_halve_energy():
+    """R2C requests serve through their own plan/sweep cache entry and
+    cost about half the modelled energy of C2C at the same length."""
+    n = 1024
+    svc = FFTService(TPU_V5E)
+    xr = jax.random.normal(KEY, (4, n))
+    rc = svc.submit(xr, transform="r2c")
+    cc = svc.submit(xr.astype(jnp.complex64))
+    svc.drain()
+    rec_r, rec_c = svc.receipt(rc), svc.receipt(cc)
+    np.testing.assert_allclose(rec_r.result, jnp.fft.rfft(xr),
+                               rtol=3e-3, atol=3e-3)
+    assert rec_r.request.bytes == rec_c.request.bytes // 2
+    assert rec_r.energy_j < 0.7 * rec_c.energy_j
+    # distinct transforms must not share a cache entry
+    assert len(svc.cache) == 2
+
+
 def test_service_pulsar_requests():
     svc = FFTService(TPU_V5E)
     x = np.asarray(jax.random.normal(KEY, (2, 2048)), dtype=np.float32)
