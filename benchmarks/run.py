@@ -17,6 +17,8 @@ figure's headline quantity).
   kernels               Pallas kernels (interpret) vs jnp oracle wall time
   fft                   mixed-radix engine: stages, R2C vs C2C wall time,
                         J/transform model -> persists BENCH_fft.json
+  fft2                  N-D plan graph: HBM passes vs the per-axis chain,
+                        fused four-step parity -> persists BENCH_fft2.json
   roofline              the dry-run roofline table (artifacts)
   dvfs_cells            the paper's technique applied to every dry-run cell
   serving               the energy-aware FFT service on a synthetic stream
@@ -377,6 +379,101 @@ def fft():
          f"r2c_over_c2c_n4096={head.get('r2c_over_c2c', float('nan')):.2f}")
 
 
+def fft2():
+    """N-D plan-graph microbench — persists BENCH_fft2.json.
+
+    Per 2-D shape: HBM passes of the plan graph vs the per-axis moveaxis
+    chain (the acceptance >= 2x reduction for pow2 shapes), modelled
+    J/transform at the boost vs the optimal clock (C2C and R2C), and
+    measured wall time through the fused kernels (interpret mode
+    off-TPU).  Also records the four-step headline: the long-1-D plan is
+    two fused kernel passes with parity vs jnp.fft.fft at 1e-4 rtol.
+    """
+    from repro.core.dvfs import energy_per_transform, sweep
+    from repro.core.hardware import TESLA_V100
+    from repro.core.workloads import FFTCase, fft_workload
+    from repro.fft.multidim import fft2 as fft2d, rfft2
+    from repro.fft.plan import plan_for_length
+    from repro.fft.plan_nd import plan_nd
+
+    wall_max = int(os.environ.get("REPRO_FFT_BENCH_MAX_LOG2_WALL", "13"))
+    dev = TESLA_V100
+    shapes = [(64, 64), (128, 128), (256, 256), (512, 512),
+              (1024, 1024), (2048, 2048), (100, 128), (12, 1024)]
+    rows = []
+    for shape in shapes:
+        plan_c = plan_nd(shape)
+        plan_r = plan_nd(shape, "r2c")
+        row = {
+            "shape": list(shape),
+            "n": plan_c.n,
+            "nodes": [n.op for n in plan_c.nodes],
+            "passes_plan": plan_c.passes,
+            "passes_chain": plan_c.chain_passes,
+            "pass_reduction": plan_c.chain_passes / plan_c.passes,
+            "passes_plan_r2c": plan_r.passes,
+        }
+        for transform, plan in (("c2c", plan_c), ("r2c", plan_r)):
+            case = FFTCase(shape=shape, transform=transform, radices=(4, 2))
+            res = sweep(fft_workload(case, dev), dev)
+            per = energy_per_transform(res, case.n_fft)
+            row[f"model_j_per_fft_{transform}"] = per["optimal_j"]
+            row[f"model_j_per_fft_{transform}_boost"] = per["boost_j"]
+        if math.log2(plan_c.n) <= wall_max:
+            batch = max(2**18 // plan_c.n, 2)
+            key = jax.random.PRNGKey(0)
+            xr = jax.random.normal(key, (batch, *shape), jnp.float32)
+            xc = (xr + 1j * jax.random.normal(key, (batch, *shape))
+                  ).astype(jnp.complex64)
+            row["batch"] = batch
+            row["wall_us_c2c"] = _timeit(jax.jit(plan_c.fn), xc,
+                                         n=5, warmup=2, reduce=min)
+            row["wall_us_r2c"] = _timeit(jax.jit(plan_r.fn), xr,
+                                         n=5, warmup=2, reduce=min)
+            row["r2c_over_c2c"] = row["wall_us_r2c"] / row["wall_us_c2c"]
+        rows.append(row)
+        _row(f"fft2_{shape[0]}x{shape[1]}", row.get("wall_us_c2c", 0.0),
+             f"passes={row['passes_plan']}v{row['passes_chain']};"
+             f"nodes={'+'.join(row['nodes'])}")
+
+    # Four-step headline: two fused passes + tight parity.
+    n4 = 2**14
+    plan4 = plan_for_length(n4)
+    x = (jax.random.normal(jax.random.PRNGKey(1), (2, n4)) +
+         1j * jax.random.normal(jax.random.PRNGKey(2), (2, n4))
+         ).astype(jnp.complex64)
+    got = np.asarray(plan4(x))
+    want = np.fft.fft(np.asarray(x), axis=-1)
+    four_step_rel = float(np.abs(got - want).max() / np.abs(want).max())
+    _row("fft2_four_step", 0.0,
+         f"passes={plan4.passes};rel_err={four_step_rel:.2e}")
+
+    pow2_rows = [r for r in rows if all(
+        d & (d - 1) == 0 for d in r["shape"])]
+    out = {
+        "device_model": dev.name,
+        "backend": jax.default_backend(),
+        "criteria": {
+            # Acceptance: >= 2x HBM-pass reduction for pow2 2-D shapes.
+            "min_pass_reduction_pow2_2d": min(
+                r["pass_reduction"] for r in pow2_rows),
+            "pow2_2d_passes": max(r["passes_plan"] for r in pow2_rows),
+            # Acceptance: four-step = 2 fused passes, 1e-4 parity.
+            "four_step_passes": plan4.passes,
+            "four_step_rel_err": four_step_rel,
+            "four_step_parity_1e4": four_step_rel < 1e-4,
+        },
+        "shapes": rows,
+    }
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_fft2.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    _row("fft2_bench_json", 0.0,
+         f"written={os.path.abspath(path)};"
+         f"min_pass_reduction={out['criteria']['min_pass_reduction_pow2_2d']:.2f};"
+         f"four_step_rel={four_step_rel:.2e}")
+
+
 def _synthetic_stream(rng, lengths, n_requests):
     """A repeated-shape request stream: (payload, length) tuples."""
     stream = []
@@ -450,7 +547,7 @@ def serving():
 BENCHES = [fig4_exec_time, fig6_time_vs_freq, fig7_energy_u_shape,
            fig8_power_vs_freq, fig9_optimal_freq, table3_mean_optimal,
            fig10_gflops_per_watt, fig11_exec_increase, fig13_16_ief,
-           table4_pipeline, kernels, fft, roofline, dvfs_cells,
+           table4_pipeline, kernels, fft, fft2, roofline, dvfs_cells,
            fft_pencil_roofline, conclusions_cost_co2, serving]
 
 

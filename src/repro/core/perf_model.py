@@ -145,6 +145,8 @@ def absolute_profile(
     mxu_flops: float | None = None,
     stages: float = 0.0,
     stage_bytes: float = 0.0,
+    passes: float = 1.0,
+    pass_bytes: float = 0.0,
 ) -> WorkloadProfile:
     """Build a profile from absolute traffic/flop counts.
 
@@ -160,10 +162,18 @@ def absolute_profile(
     ``repro.fft.radix.stage_count``): they add ``stages * stage_bytes`` to
     ``cache_bytes`` — how a mixed-radix FFT's reduced stage count feeds
     the t_cache term of the frequency model.
+
+    ``passes``/``pass_bytes`` express multi-pass HBM traffic the same way:
+    ``passes * pass_bytes`` adds to ``hbm_bytes``.  This is how the plan
+    graph's pass counts (``repro.fft.plan_nd`` — fused N-D and four-step
+    plans) reach the t_mem term: a pow2 2-D transform passes 2 where the
+    per-axis chain passed 4+, and the profile's memory time shrinks by
+    exactly that ratio.
     """
     if mxu_flops is None:
         mxu_flops = flops
     cache_bytes = cache_bytes + stages * stage_bytes
+    hbm_bytes = hbm_bytes + passes * pass_bytes
     t_issue = flops / (device.peak_flops * issue_efficiency) if flops else 0.0
     return WorkloadProfile(
         name=name,

@@ -66,6 +66,20 @@ def _butterfly_flops(n: int, radices: tuple[int, ...] | None) -> float:
     return mixed_radix_flop_count(n, radices)
 
 
+def _r2c_flops(n: int, radices: tuple[int, ...] | None) -> float:
+    """FLOPs of one packed length-``n`` R2C/C2R transform (Eq. 5 at N/2).
+
+    With an explicit schedule this is exactly
+    :func:`repro.fft.radix.r2c_flop_count` (the engine's executed count);
+    ``radices=None`` keeps the paper's reporting convention.
+    """
+    if radices is not None:
+        from repro.fft.radix import r2c_flop_count
+        return r2c_flop_count(n, radices)
+    m = max(n // 2, 1)
+    return _butterfly_flops(m, None) + 10.0 * (m + 1)
+
+
 def _stage_count(n: int, radices: tuple[int, ...] | None) -> float:
     """Butterfly stages of one fused pass (feeds the t_cache term).
 
@@ -99,12 +113,17 @@ TRANSFORMS = ("c2c", "r2c", "c2r")
 
 @dataclasses.dataclass(frozen=True)
 class FFTCase:
-    """One measured configuration: length, precision, transform and batch.
+    """One measured configuration: length/shape, precision, transform, batch.
 
     ``transform``: C2C (the paper's workload) or the real-input R2C / its
     C2R inverse — real transforms pack N points into an N/2 complex FFT,
     so both the per-transform element size (Eq. 6) and the FLOP count
     (Eq. 5) halve.
+
+    ``shape``: transform-axes lengths for N-D cases (Eq. 2); ``n`` is then
+    derived as their product and pass counts come from the plan graph
+    (``repro.fft.plan_nd``) instead of the 1-D staircase.  Leave ``None``
+    (and set ``n``) for the paper's 1-D sweep.
 
     ``radices``: the kernel's butterfly schedule, feeding radix-aware
     stage/FLOP counts.  ``None`` keeps the legacy cuFFT-convention model
@@ -112,22 +131,40 @@ class FFTCase:
     5 N log2 N FLOPs).
     """
 
-    n: int
+    n: int = 0
     precision: str = "fp32"
     batch_bytes: float = 2e9      # paper: ~2 GB of input per batch
     name: str = ""
     transform: str = "c2c"
     radices: tuple[int, ...] | None = None
+    shape: tuple[int, ...] | None = None
 
     def __post_init__(self):
+        if self.shape is not None:
+            prod = 1
+            for d in self.shape:
+                prod *= d
+            if self.n not in (0, prod):
+                raise ValueError(
+                    f"n={self.n} inconsistent with shape={self.shape}")
+            object.__setattr__(self, "n", prod)
+        if self.n < 1:
+            raise ValueError("FFTCase needs n >= 1 (or a shape)")
         if self.transform not in TRANSFORMS:
             raise ValueError(f"unknown transform {self.transform!r}; "
                              f"have {TRANSFORMS}")
         if not self.name:
             suffix = "" if self.transform == "c2c" else f"-{self.transform}"
+            dims = ("x".join(str(d) for d in self.shape)
+                    if self.shape else str(self.n))
             object.__setattr__(
-                self, "name", f"fft-n{self.n}-{self.precision}{suffix}"
+                self, "name", f"fft-n{dims}-{self.precision}{suffix}"
             )
+
+    @property
+    def last_axis(self) -> int:
+        """The axis the R2C packing applies to (Eq. 2: the last one)."""
+        return self.shape[-1] if self.shape else self.n
 
     @property
     def elem_bytes(self) -> int:
@@ -135,10 +172,10 @@ class FFTCase:
 
         Non-pow2 real transforms fall back to the full C2C algorithm
         (repro.fft.plan), so they pay — and are modelled at — complex
-        bytes.
+        bytes.  N-D r2c packs along the last axis only.
         """
         full = COMPLEX_BYTES[self.precision]
-        if self.transform in ("r2c", "c2r") and is_pow2(self.n):
+        if self.transform in ("r2c", "c2r") and is_pow2(self.last_axis):
             return full // 2
         return full
 
@@ -161,6 +198,8 @@ def fft_workload(
     lengths, notably N = 8192 on the V100): the cache term is pinned just
     above the memory term so every frequency step costs time.
     """
+    if case.shape is not None and len(case.shape) > 1:
+        return _nd_fft_workload(case, device, regime_c=regime_c)
     n, b = case.n, case.elem_bytes
     n_fft = case.n_fft
     # The packed R2C/C2R path only exists for pow2 lengths; non-pow2 real
@@ -182,9 +221,8 @@ def fft_workload(
         stages = _stage_count(min(m, 2**13), case.radices)
     else:
         passes = plan_passes(n_work)
-        flops = _butterfly_flops(n_work, case.radices) * n_fft
-        if real:
-            flops += 10.0 * (n_work + 1) * n_fft     # Hermitian split/merge
+        flops = (_r2c_flops(n, case.radices) if real
+                 else _butterfly_flops(n_work, case.radices)) * n_fft
         stages = _stage_count(min(n_work, 2**13), case.radices)
 
     hbm_bytes = 2.0 * data_bytes * passes          # read + write per pass
@@ -204,6 +242,69 @@ def fft_workload(
         t_cache=t_cache,
         t_compute=flops / peak,
         contention=0.01,            # mild regime-(a) relief, Fig. 6
+        flops=flops,
+    )
+
+
+def _nd_fft_workload(
+    case: FFTCase,
+    device: DeviceSpec,
+    *,
+    regime_c: bool = False,
+) -> WorkloadProfile:
+    """Analytic profile of a batched N-D FFT (Eq. 2 factored passes).
+
+    Pass counts come from the compiled plan graph
+    (:func:`repro.fft.plan_nd.nd_pass_summary`) — pow2 axes fuse their
+    hand-off transpose into the FFT write, so a pow2 2-D transform costs
+    2 HBM passes where the per-axis ``moveaxis`` chain paid 4+.  FLOPs sum
+    the per-axis butterfly counts over the points of the other axes; an
+    R2C last axis does half the work and shrinks every later axis's row
+    count to (n_last/2 + 1)/n_last.
+    """
+    from repro.fft.plan_nd import nd_pass_summary
+
+    shape = case.shape
+    n, b = case.n, case.elem_bytes
+    n_fft = case.n_fft
+    transform = case.transform if case.transform != "c2r" else "r2c"
+    passes, _chain, stages = nd_pass_summary(shape, transform)
+
+    def axis_flops(na: int) -> float:
+        """One length-``na`` 1-D transform, Bluestein-aware (Sec. 2.1)."""
+        if not is_pow2(na):
+            m = 1 << math.ceil(math.log2(max(2 * na - 1, 2)))
+            return 2 * _butterfly_flops(m, case.radices) + 20.0 * na
+        return _butterfly_flops(na, case.radices)
+
+    real = transform == "r2c" and is_pow2(shape[-1]) and shape[-1] >= 2
+    flops = 0.0
+    rows_frac = 1.0
+    for axis in reversed(range(len(shape))):
+        na = shape[axis]
+        batch_pts = n / na                      # transforms of this axis
+        if axis == len(shape) - 1 and real:
+            flops += batch_pts * _r2c_flops(na, case.radices)
+            rows_frac = (na // 2 + 1) / na      # half-spectrum downstream
+        else:
+            flops += rows_frac * batch_pts * axis_flops(na)
+    flops *= n_fft
+
+    data_bytes = float(n) * b * n_fft
+    hbm_bytes = 2.0 * data_bytes * passes
+    cache_bytes = 2.0 * data_bytes * stages
+    peak = device.peak_flops * PRECISION_PEAK[case.precision]
+    t_mem = hbm_bytes / device.hbm_bandwidth
+    t_cache = cache_bytes / device.cache_bandwidth
+    if regime_c:
+        t_cache = max(t_cache, 1.02 * t_mem)
+    return WorkloadProfile(
+        name=case.name,
+        t_mem=t_mem,
+        t_issue=flops / (peak * device.issue_efficiency),
+        t_cache=t_cache,
+        t_compute=flops / peak,
+        contention=0.01,
         flops=flops,
     )
 

@@ -6,14 +6,17 @@
   bluestein    arbitrary-length FFT via chirp-z (paper Sec. 2.1),
                chirp/filter factors cached per length
   multidim     2-D/3-D transforms by axis decomposition (paper Eq. 2)
+  plan_nd      N-D plan-graph compiler: fused transpose-write passes
   distributed  pencil/four-step FFT across a device mesh (shard_map)
   pipeline     the paper's pulsar-search pipeline (Sec. 5.3)
   plan         per-length algorithm choice + Pallas kernel routing
 """
 from repro.fft.bluestein import bluestein_fft
-from repro.fft.multidim import fft2, fftn, rfft2
+from repro.fft.multidim import fft2, fftn, rfft2, rfftn
 from repro.fft.stockham import fft, ifft, irfft, rfft
 from repro.fft.plan import plan_for_length, pow2_fft, FFTPlan
+from repro.fft.plan_nd import NDPlan, plan_nd
 
 __all__ = ["fft", "ifft", "rfft", "irfft", "fft2", "rfft2", "fftn",
-           "bluestein_fft", "plan_for_length", "pow2_fft", "FFTPlan"]
+           "rfftn", "bluestein_fft", "plan_for_length", "pow2_fft",
+           "FFTPlan", "NDPlan", "plan_nd"]

@@ -1,45 +1,75 @@
-"""Multi-dimensional FFTs by axis decomposition — the paper's Eq. (2).
+"""Multi-dimensional FFTs — the paper's Eq. (2), compiled as plan graphs.
 
 The 2-D (and higher) DFT factorises into independent 1-D DFTs along each
-axis; cuFFT does exactly this (paper Sec. 2.1), so studying the 1-D
-transform covers the higher-dimensional cases.  We expose fft2/fftn (and
-the real-input rfft2) built on the 1-D planner, so every length class
-(pow2/four-step/Bluestein) is usable per axis and every pow2 pass routes
-through the Pallas kernel (repro.fft.plan).
+axis; cuFFT does exactly this (paper Sec. 2.1).  Naively that costs a
+``moveaxis`` + 1-D transform + ``moveaxis`` back per axis — three HBM
+round trips of the whole batch each.  Here every transform routes through
+:mod:`repro.fft.plan_nd`: the hand-off transpose is fused into the FFT
+kernel's write (one pass per pow2 axis, total), so ``fft2`` of pow2
+shapes costs 2 HBM passes instead of 4+, and only non-pow2 (Bluestein)
+axes pay an explicit tiled-transpose node.
+
+Public API mirrors ``jnp.fft``: fft2 / rfft2 / fftn / rfftn, with
+``axes=`` supported by normalising the transform axes to the trailing
+positions first (a real transpose only when they are not already there).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.fft.plan import plan_for_length
+from repro.fft.plan_nd import plan_nd
 
 
-def _fft_along(x: jax.Array, axis: int, kind: str = "c2c") -> jax.Array:
-    plan = plan_for_length(x.shape[axis], kind)
-    moved = jnp.moveaxis(x, axis, -1)
-    return jnp.moveaxis(plan(moved), -1, axis)
+def _run(x: jax.Array, axes: tuple[int, ...], kind: str) -> jax.Array:
+    x = jnp.asarray(x)
+    axes = tuple(a % x.ndim for a in axes)
+    if len(set(axes)) != len(axes):
+        if kind == "r2c":
+            # np.fft.rfftn's repeated-axes behaviour is a zero-padding
+            # accident of its s= bookkeeping; reject rather than imitate.
+            raise ValueError(f"repeated axes {axes} in a real transform")
+        # numpy fftn semantics: a repeated axis is transformed repeatedly;
+        # compile each occurrence as its own single-axis plan.
+        for ax in axes:
+            x = _run(x, (ax,), "c2c")
+        return x
+    trailing = tuple(range(x.ndim - len(axes), x.ndim))
+    moved = axes != trailing
+    if moved:
+        x = jnp.moveaxis(x, axes, trailing)
+    plan = plan_nd(tuple(x.shape[-len(axes):]), kind)
+    y = plan(x)
+    if moved:
+        y = jnp.moveaxis(y, trailing, axes)
+    return y
 
 
 def fft2(x: jax.Array, axes: tuple[int, int] = (-2, -1)) -> jax.Array:
-    """2-D C2C FFT over ``axes`` (two sets of 1-D transforms, Eq. 2)."""
-    a0, a1 = axes
-    return _fft_along(_fft_along(x, a1), a0)
+    """2-D C2C FFT over ``axes`` — two fused kernel passes at pow2 shapes."""
+    return _run(x, axes, "c2c")
 
 
 def rfft2(x: jax.Array, axes: tuple[int, int] = (-2, -1)) -> jax.Array:
-    """2-D FFT of real input: R2C along the last axis, C2C along the other.
+    """2-D FFT of real input: R2C along ``axes[1]``, C2C along ``axes[0]``.
 
     Matches ``jnp.fft.rfft2``: output has ``n // 2 + 1`` bins along
     ``axes[1]``.  The R2C pass halves both FLOPs and HBM traffic of the
-    innermost (largest) transform set.
+    innermost (largest) transform set, and its Hermitian split runs as a
+    kernel epilogue on the same fused pass as the hand-off transpose.
     """
-    a0, a1 = axes
-    return _fft_along(_fft_along(x, a1, "r2c"), a0)
+    return _run(x, axes, "r2c")
 
 
 def fftn(x: jax.Array, axes: tuple[int, ...] | None = None) -> jax.Array:
-    axes = tuple(range(x.ndim)) if axes is None else axes
-    for ax in axes:
-        x = _fft_along(x, ax)
-    return x
+    """N-D C2C FFT over ``axes`` (default: all) — one fused pass per pow2
+    axis; the axis cycle restores the original order for free."""
+    axes = tuple(range(jnp.asarray(x).ndim)) if axes is None else tuple(axes)
+    return _run(x, axes, "c2c")
+
+
+def rfftn(x: jax.Array, axes: tuple[int, ...] | None = None) -> jax.Array:
+    """N-D FFT of real input: R2C on the last of ``axes``, C2C on the rest
+    (the ``jnp.fft.rfftn`` convention)."""
+    axes = tuple(range(jnp.asarray(x).ndim)) if axes is None else tuple(axes)
+    return _run(x, axes, "r2c")

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.core.hardware import DeviceSpec
 from repro.core.perf_model import WorkloadProfile
-from repro.fft.plan import plan_for_length
+from repro.fft.plan_nd import plan_nd
 
 
 MAX_HARMONICS = 32
@@ -89,11 +89,13 @@ def pulsar_pipeline(x: jax.Array, n_harmonics: int = MAX_HARMONICS,
     pipeline, at the cost model's ``r2c`` accounting).
     """
     n = x.shape[-1]
+    # Route through the plan graph (rank-1 degenerates to the 1-D planner,
+    # so kernel routing and pass accounting stay identical).
     if real_input:
-        plan = plan_for_length(n, "r2c")
+        plan = plan_nd((n,), "r2c")
         spec = plan(jnp.real(x).astype(jnp.float32))
     else:
-        plan = plan_for_length(n)
+        plan = plan_nd((n,), "c2c")
         spec = plan(x.astype(jnp.complex64))
     p = power_spectrum(spec, n)
     mean, std = spectrum_stats(p)

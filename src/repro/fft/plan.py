@@ -54,13 +54,22 @@ MAX_SINGLE_PASS = 2**13
 
 try:
     from repro.kernels.fft.ops import (MAX_KERNEL_N, fft_kernel_c2c,
-                                       fft_kernel_c2r, fft_kernel_r2c)
+                                       fft_kernel_c2c_axis1,
+                                       fft_kernel_c2c_t, fft_kernel_c2r,
+                                       fft_kernel_r2c, fft_kernel_r2c_t,
+                                       transpose_kernel)
     _kernel_fft: Callable | None = fft_kernel_c2c
     _kernel_rfft: Callable | None = fft_kernel_r2c
     _kernel_irfft: Callable | None = fft_kernel_c2r
+    _kernel_fft_t: Callable | None = fft_kernel_c2c_t
+    _kernel_fft_axis1: Callable | None = fft_kernel_c2c_axis1
+    _kernel_rfft_t: Callable | None = fft_kernel_r2c_t
+    _kernel_transpose: Callable | None = transpose_kernel
 except Exception:                                     # pragma: no cover
     MAX_KERNEL_N = MAX_SINGLE_PASS
     _kernel_fft = _kernel_rfft = _kernel_irfft = None
+    _kernel_fft_t = _kernel_fft_axis1 = None
+    _kernel_rfft_t = _kernel_transpose = None
 
 
 def _pallas_enabled() -> bool:
@@ -91,6 +100,101 @@ def pow2_fft(x: jax.Array, *, inverse: bool = False) -> jax.Array:
 
 def _is_pow2(n: int) -> bool:
     return n > 0 and (n & (n - 1)) == 0
+
+
+# ---------------------------------------------------------------------------
+# Fused-epilogue pass primitives (the plan graph's node executors)
+# ---------------------------------------------------------------------------
+
+def fft_transposed(x: jax.Array, *, twiddle=None,
+                   inverse: bool = False) -> jax.Array:
+    """C2C FFT along the last axis with the last two axes swapped on write.
+
+    One fused kernel pass: (..., R, C) -> (..., C, R).  ``twiddle`` (an
+    (R, C) complex table) rides along as a kernel epilogue — the four-step
+    inter-pass multiply costs zero extra HBM passes.  Falls back to
+    routed-FFT + XLA multiply + XLA transpose when Pallas is unavailable
+    (numerically identical, just more memory passes).
+    """
+    x = _as_complex(x)
+    n = x.shape[-1]
+    kern = _kernel_fft_t
+    if (kern is not None and _is_pow2(n) and n <= MAX_KERNEL_N
+            and n > 1 and _pallas_enabled()):
+        try:
+            return kern(x, twiddle=twiddle, inverse=inverse)
+        except Exception:                             # graceful fallback
+            pass
+    y = _routed_1d(x, n, inverse)
+    if twiddle is not None:
+        y = y * jnp.asarray(twiddle).astype(y.dtype)
+    return jnp.swapaxes(y, -1, -2)
+
+
+def _routed_1d(x: jax.Array, n: int, inverse: bool) -> jax.Array:
+    """Last-axis C2C of any length, honouring ``inverse`` (conj trick for
+    the non-pow2 plans, which only run forward)."""
+    if _is_pow2(n):
+        return pow2_fft(x, inverse=inverse)
+    plan = plan_for_length(n)
+    if inverse:
+        return jnp.conj(plan(jnp.conj(x))) / n
+    return plan(x)
+
+
+def fft_column(x: jax.Array, *, twiddle=None,
+               inverse: bool = False) -> jax.Array:
+    """C2C FFT over axis -2, layout preserved: (..., R, C) -> (..., R, C).
+
+    One fused kernel pass (transpose-read + FFT + optional twiddle
+    epilogue + transpose-write, all in VMEM) — the column pass of the
+    four-step algorithm.  ``twiddle`` is a (C, R) table multiplying output
+    ``[..., k, j]`` by ``twiddle[j, k]``.  Falls back to XLA transpose +
+    routed FFT + multiply when Pallas is unavailable.
+    """
+    x = _as_complex(x)
+    r = x.shape[-2]
+    kern = _kernel_fft_axis1
+    if (kern is not None and _is_pow2(r) and 1 < r <= MAX_KERNEL_N
+            and _pallas_enabled()):
+        try:
+            return kern(x, twiddle=twiddle, inverse=inverse)
+        except Exception:                             # graceful fallback
+            pass
+    y = _routed_1d(jnp.swapaxes(x, -1, -2), r, inverse)
+    if twiddle is not None:
+        y = y * jnp.asarray(twiddle).astype(y.dtype)
+    return jnp.swapaxes(y, -1, -2)
+
+
+def rfft_transposed(x: jax.Array) -> jax.Array:
+    """R2C FFT along the last axis, transposed write: (..., R, C) real ->
+    (..., C/2+1, R) — one fused pass (pack + half-length FFT + Hermitian
+    split + transpose all in VMEM)."""
+    x = jnp.asarray(x)
+    if jnp.issubdtype(x.dtype, jnp.complexfloating):
+        x = x.real
+    n = x.shape[-1]
+    kern = _kernel_rfft_t
+    if (kern is not None and _is_pow2(n) and 4 <= n
+            and n // 2 <= MAX_KERNEL_N and _pallas_enabled()):
+        try:
+            return kern(x)
+        except Exception:
+            pass
+    return jnp.swapaxes(plan_for_length(n, "r2c")(x), -1, -2)
+
+
+def tiled_transpose(x: jax.Array) -> jax.Array:
+    """Swap the last two axes in one tiled kernel pass (read row tiles,
+    write column tiles); XLA transpose on fallback."""
+    kern = _kernel_transpose
+    if kern is not None and _pallas_enabled():
+        try:
+            return kern(x)
+        except Exception:
+            pass
+    return jnp.swapaxes(x, -1, -2)
 
 
 def _four_step_split(n: int) -> tuple[int, int]:
@@ -125,30 +229,34 @@ def _four_step_twiddle(n1: int, n2: int) -> np.ndarray:
 
 
 def four_step_fft(x: jax.Array, n1: int, n2: int) -> jax.Array:
-    """Long FFT as (n1 x n2) decomposition — Bailey's four-step algorithm.
+    """Long FFT as (n1 x n2) decomposition — Bailey's four-step algorithm,
+    run as TWO fused kernel passes.
 
-    1. view as (n1, n2), FFT the columns (length n1, stride n2)
-    2. twiddle by exp(-2*pi*i*j*k/n) — cached per (n1, n2)
-    3. FFT the rows (length n2)
-    4. read out transposed: out[k2*n1 + k1]
+    View x as v[j1, j2] (row-major).  With outputs indexed k = k2*n1 + k1:
 
-    Both inner FFTs are batched pow2 passes routed through the Pallas
-    kernel (:func:`pow2_fft`); the distributed version
-    (repro.fft.distributed) turns the transpose into an all_to_all across
-    the mesh — cuFFT's multi-kernel plan, TPU-style.
+      pass 1: FFT the columns (length n1, axis -2, transpose-read in
+              VMEM) -> V[k1, j2]; multiply the inter-pass twiddle
+              exp(-2*pi*i*j2*k1/n) as a kernel epilogue; write back in
+              the same layout -> T[k1, j2]
+      pass 2: FFT the rows of T (length n2) -> Y[k1, k2]; write
+              transposed -> out[k2, k1], which flattens to natural order.
+
+    The unfused formulation costs kernel + XLA-twiddle + three XLA
+    transposes (five HBM round trips of the batch); the fused pair costs
+    exactly two.  Both passes route through the Pallas kernels
+    (:func:`fft_column`, :func:`fft_transposed`), falling back to routed
+    :func:`pow2_fft` + XLA ops when Pallas is unavailable.  The
+    distributed version (repro.fft.distributed) turns the transpose into
+    an all_to_all across the mesh — cuFFT's multi-kernel plan, TPU-style.
     """
     n = n1 * n2
     assert x.shape[-1] == n
     batch = x.shape[:-1]
     v = x.reshape(*batch, n1, n2)
-    # columns: transpose so the transform axis is last, FFT, transpose back
-    v = jnp.swapaxes(v, -1, -2)                 # (..., n2, n1)
-    v = pow2_fft(v)                              # FFT over n1
-    tw = jnp.asarray(_four_step_twiddle(n1, n2)).astype(v.dtype)
-    v = v * tw
-    v = pow2_fft(jnp.swapaxes(v, -1, -2))        # (..., n1, n2), FFT over n2
-    out = jnp.swapaxes(v, -1, -2).reshape(*batch, n)
-    return out
+    tw = _four_step_twiddle(n1, n2)              # (n2, n1): w^{j2*k1}
+    v = fft_column(v, twiddle=tw)                # (..., n1, n2): T[k1, j2]
+    v = fft_transposed(v)                        # (..., n2, n1), natural
+    return v.reshape(*batch, n)
 
 
 # ---------------------------------------------------------------------------

@@ -126,26 +126,123 @@ def _c2c_body(re_ref, im_ref, twr_ref, twi_ref, out_re_ref, out_im_ref, *,
     out_im_ref[...] = out_im
 
 
-def _r2c_body(x_ref, twr_ref, twi_ref, swr_ref, swi_ref,
-              out_re_ref, out_im_ref, *, n: int, radices: tuple[int, ...]):
-    """Packed R2C: N reals -> N/2 complex FFT -> Hermitian split, fused."""
-    x = x_ref[...]
+# ---------------------------------------------------------------------------
+# Fused epilogues: transposed write (+ optional four-step twiddle)
+# ---------------------------------------------------------------------------
+
+def _fft_t_body(re_ref, im_ref, twr_ref, twi_ref, out_re_ref, out_im_ref, *,
+                n: int, radices: tuple[int, ...], inverse: bool):
+    """FFT a (1, tile_r, n) tile of rows, write it transposed (1, n, tile_r).
+
+    The row->column hand-off of a 2-D (or four-step) transform costs zero
+    extra HBM passes: the transpose happens in VMEM on the way out.
+    """
+    re = re_ref[0]
+    im = im_ref[0]
+    out_re, out_im = _mixed_radix_stages(re, im, n, twr_ref[...],
+                                         twi_ref[...], radices=radices,
+                                         inverse=inverse)
+    out_re_ref[...] = out_re.T[None]
+    out_im_ref[...] = out_im.T[None]
+
+
+def _fft_t_twiddle_body(re_ref, im_ref, twr_ref, twi_ref, ftwr_ref, ftwi_ref,
+                        out_re_ref, out_im_ref, *, n: int,
+                        radices: tuple[int, ...], inverse: bool):
+    """:func:`_fft_t_body` plus the four-step inter-pass twiddle epilogue.
+
+    ``ftw*`` streams the (tile_r, n) window of the (R, n) twiddle matrix
+    for this grid step, so the multiply that used to be a separate XLA op
+    (an extra HBM read+write of the whole batch) rides the same pass.
+    """
+    re = re_ref[0]
+    im = im_ref[0]
+    out_re, out_im = _mixed_radix_stages(re, im, n, twr_ref[...],
+                                         twi_ref[...], radices=radices,
+                                         inverse=inverse)
+    out_re, out_im = _cmul(out_re, out_im, ftwr_ref[...], ftwi_ref[...])
+    out_re_ref[...] = out_re.T[None]
+    out_im_ref[...] = out_im.T[None]
+
+
+def _fft_axis1_body(re_ref, im_ref, twr_ref, twi_ref, out_re_ref,
+                    out_im_ref, *, n: int, radices: tuple[int, ...],
+                    inverse: bool):
+    """FFT over axis -2 of a (1, R, tile_c) tile, layout preserved.
+
+    Transpose-read + FFT + transpose-write, all inside VMEM: the column
+    transform of a four-step / 2-D plan without any HBM transpose.
+    """
+    re = re_ref[0].T                                   # (tile_c, R)
+    im = im_ref[0].T
+    out_re, out_im = _mixed_radix_stages(re, im, n, twr_ref[...],
+                                         twi_ref[...], radices=radices,
+                                         inverse=inverse)
+    out_re_ref[...] = out_re.T[None]                   # back to (R, tile_c)
+    out_im_ref[...] = out_im.T[None]
+
+
+def _fft_axis1_twiddle_body(re_ref, im_ref, twr_ref, twi_ref, ftwr_ref,
+                            ftwi_ref, out_re_ref, out_im_ref, *, n: int,
+                            radices: tuple[int, ...], inverse: bool):
+    """:func:`_fft_axis1_body` + the four-step twiddle epilogue.
+
+    ``ftw*`` streams the (tile_c, R) window of the (C, R) twiddle table:
+    element [j, k] multiplies output bin k of column j.
+    """
+    re = re_ref[0].T
+    im = im_ref[0].T
+    out_re, out_im = _mixed_radix_stages(re, im, n, twr_ref[...],
+                                         twi_ref[...], radices=radices,
+                                         inverse=inverse)
+    out_re, out_im = _cmul(out_re, out_im, ftwr_ref[...], ftwi_ref[...])
+    out_re_ref[...] = out_re.T[None]
+    out_im_ref[...] = out_im.T[None]
+
+
+def _r2c_tile(x, twr, twi, swr, swi, *, n: int, radices: tuple[int, ...]):
+    """Packed R2C of a (b, n) real tile -> (b, n/2+1) re/im planes."""
     b = x.shape[0]
     m = n // 2
     v = x.reshape(b, m, 2)
-    zr, zi = _mixed_radix_stages(v[..., 0], v[..., 1], m,
-                                 twr_ref[...], twi_ref[...],
+    zr, zi = _mixed_radix_stages(v[..., 0], v[..., 1], m, twr, twi,
                                  radices=radices, inverse=False)
     fr = jnp.concatenate([zr, zr[:, :1]], axis=1)      # wrap Z[m] = Z[0]
     fi = jnp.concatenate([zi, zi[:, :1]], axis=1)
     rr, ri = fr[:, ::-1], -fi[:, ::-1]                 # conj(Z[m-k])
     dr, di = fr - rr, fi - ri
     qr, qi = 0.5 * di, -0.5 * dr                       # Zo = -i/2 * d
-    wr = swr_ref[...].reshape(1, m + 1)
-    wi = swi_ref[...].reshape(1, m + 1)
+    wr = swr.reshape(1, m + 1)
+    wi = swi.reshape(1, m + 1)
     pr, pi = _cmul(qr, qi, wr, wi)
-    out_re_ref[...] = 0.5 * (fr + rr) + pr             # X = Ze + W * Zo
-    out_im_ref[...] = 0.5 * (fi + ri) + pi
+    return 0.5 * (fr + rr) + pr, 0.5 * (fi + ri) + pi  # X = Ze + W * Zo
+
+
+def _r2c_t_body(x_ref, twr_ref, twi_ref, swr_ref, swi_ref,
+                out_re_ref, out_im_ref, *, n: int, radices: tuple[int, ...]):
+    """Fused R2C + transposed write: (1, tile_r, n) real -> (1, n/2+1, tile_r)."""
+    out_re, out_im = _r2c_tile(x_ref[0], twr_ref[...], twi_ref[...],
+                               swr_ref[...], swi_ref[...], n=n,
+                               radices=radices)
+    out_re_ref[...] = out_re.T[None]
+    out_im_ref[...] = out_im.T[None]
+
+
+def _transpose_body(*refs):
+    """Tiled transpose: k (1, tr, tc) input planes -> k (1, tc, tr) planes."""
+    k = len(refs) // 2
+    for i in range(k):
+        refs[k + i][...] = refs[i][0].T[None]
+
+
+def _r2c_body(x_ref, twr_ref, twi_ref, swr_ref, swi_ref,
+              out_re_ref, out_im_ref, *, n: int, radices: tuple[int, ...]):
+    """Packed R2C: N reals -> N/2 complex FFT -> Hermitian split, fused."""
+    out_re, out_im = _r2c_tile(x_ref[...], twr_ref[...], twi_ref[...],
+                               swr_ref[...], swi_ref[...], n=n,
+                               radices=radices)
+    out_re_ref[...] = out_re
+    out_im_ref[...] = out_im
 
 
 def _c2r_body(xr_ref, xi_ref, twr_ref, twi_ref, swr_ref, swi_ref,
@@ -233,6 +330,195 @@ def rfft_pallas(x: jax.Array, *, tile_b: int = 8, interpret: bool = False,
         interpret=interpret,
     )
     return fn(x, twr, twi, swr, swi)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_r", "inverse", "interpret",
+                                    "radices"))
+def fft_t_pallas(re: jax.Array, im: jax.Array, *, tile_r: int = 8,
+                 inverse: bool = False, interpret: bool = False,
+                 radices: tuple[int, ...] = DEFAULT_RADICES):
+    """Fused FFT + transposed write: (B, R, C) re/im in -> (B, C, R) out.
+
+    One grid step FFTs a (tile_r, C) row tile and writes it into the
+    (C, tile_r) column window of the output — the hand-off transpose of a
+    2-D / four-step transform costs zero extra HBM passes.
+    """
+    b, r, c = re.shape
+    assert c & (c - 1) == 0, f"pow2 row lengths only, got {c}"
+    assert r % tile_r == 0, (r, tile_r)
+    grid = (b, r // tile_r)
+    in_spec = pl.BlockSpec((1, tile_r, c), lambda i, j: (i, j, 0))
+    out_spec = pl.BlockSpec((1, c, tile_r), lambda i, j: (i, 0, j))
+    twr, twi = packed_stage_twiddles(c, radices)
+    tw_spec = pl.BlockSpec(twr.shape, lambda i, j: (0, 0))
+    out_shape = [jax.ShapeDtypeStruct((b, c, r), re.dtype)] * 2
+    fn = pl.pallas_call(
+        functools.partial(_fft_t_body, n=c, radices=radices,
+                          inverse=inverse),
+        grid=grid,
+        in_specs=[in_spec, in_spec, tw_spec, tw_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(re, im, jnp.asarray(twr), jnp.asarray(twi))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_r", "inverse", "interpret",
+                                    "radices"))
+def fft_t_twiddle_pallas(re: jax.Array, im: jax.Array, ftwr: jax.Array,
+                         ftwi: jax.Array, *, tile_r: int = 8,
+                         inverse: bool = False, interpret: bool = False,
+                         radices: tuple[int, ...] = DEFAULT_RADICES):
+    """:func:`fft_t_pallas` with the four-step inter-pass twiddle fused in.
+
+    ``ftwr``/``ftwi`` is the (R, C) twiddle matrix; each grid step streams
+    its (tile_r, C) window and multiplies before the transposed write.
+    """
+    b, r, c = re.shape
+    assert c & (c - 1) == 0, f"pow2 row lengths only, got {c}"
+    assert r % tile_r == 0, (r, tile_r)
+    assert ftwr.shape == (r, c), (ftwr.shape, r, c)
+    grid = (b, r // tile_r)
+    in_spec = pl.BlockSpec((1, tile_r, c), lambda i, j: (i, j, 0))
+    ftw_spec = pl.BlockSpec((tile_r, c), lambda i, j: (j, 0))
+    out_spec = pl.BlockSpec((1, c, tile_r), lambda i, j: (i, 0, j))
+    twr, twi = packed_stage_twiddles(c, radices)
+    tw_spec = pl.BlockSpec(twr.shape, lambda i, j: (0, 0))
+    out_shape = [jax.ShapeDtypeStruct((b, c, r), re.dtype)] * 2
+    fn = pl.pallas_call(
+        functools.partial(_fft_t_twiddle_body, n=c, radices=radices,
+                          inverse=inverse),
+        grid=grid,
+        in_specs=[in_spec, in_spec, tw_spec, tw_spec, ftw_spec, ftw_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(re, im, jnp.asarray(twr), jnp.asarray(twi), ftwr, ftwi)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_c", "inverse", "interpret",
+                                    "radices"))
+def fft_axis1_pallas(re: jax.Array, im: jax.Array, *, tile_c: int = 8,
+                     inverse: bool = False, interpret: bool = False,
+                     radices: tuple[int, ...] = DEFAULT_RADICES):
+    """FFT over axis -2: (B, R, C) re/im in, (B, R, C) out, layout kept.
+
+    Each grid step pins an (R, tile_c) column tile, transposes it in VMEM,
+    runs the full stage pipeline over R and writes it back untransposed —
+    the column pass of a 2-D / four-step transform in one HBM round trip.
+    """
+    b, r, c = re.shape
+    assert r & (r - 1) == 0, f"pow2 column lengths only, got {r}"
+    assert c % tile_c == 0, (c, tile_c)
+    grid = (b, c // tile_c)
+    spec = pl.BlockSpec((1, r, tile_c), lambda i, j: (i, 0, j))
+    twr, twi = packed_stage_twiddles(r, radices)
+    tw_spec = pl.BlockSpec(twr.shape, lambda i, j: (0, 0))
+    out_shape = [jax.ShapeDtypeStruct((b, r, c), re.dtype)] * 2
+    fn = pl.pallas_call(
+        functools.partial(_fft_axis1_body, n=r, radices=radices,
+                          inverse=inverse),
+        grid=grid,
+        in_specs=[spec, spec, tw_spec, tw_spec],
+        out_specs=[spec, spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(re, im, jnp.asarray(twr), jnp.asarray(twi))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_c", "inverse", "interpret",
+                                    "radices"))
+def fft_axis1_twiddle_pallas(re: jax.Array, im: jax.Array, ftwr: jax.Array,
+                             ftwi: jax.Array, *, tile_c: int = 8,
+                             inverse: bool = False, interpret: bool = False,
+                             radices: tuple[int, ...] = DEFAULT_RADICES):
+    """:func:`fft_axis1_pallas` with a fused (C, R) twiddle epilogue:
+    output element [.., k, j] is multiplied by ``ftw[j, k]`` in-kernel."""
+    b, r, c = re.shape
+    assert r & (r - 1) == 0, f"pow2 column lengths only, got {r}"
+    assert c % tile_c == 0, (c, tile_c)
+    assert ftwr.shape == (c, r), (ftwr.shape, c, r)
+    grid = (b, c // tile_c)
+    spec = pl.BlockSpec((1, r, tile_c), lambda i, j: (i, 0, j))
+    ftw_spec = pl.BlockSpec((tile_c, r), lambda i, j: (j, 0))
+    twr, twi = packed_stage_twiddles(r, radices)
+    tw_spec = pl.BlockSpec(twr.shape, lambda i, j: (0, 0))
+    out_shape = [jax.ShapeDtypeStruct((b, r, c), re.dtype)] * 2
+    fn = pl.pallas_call(
+        functools.partial(_fft_axis1_twiddle_body, n=r, radices=radices,
+                          inverse=inverse),
+        grid=grid,
+        in_specs=[spec, spec, tw_spec, tw_spec, ftw_spec, ftw_spec],
+        out_specs=[spec, spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(re, im, jnp.asarray(twr), jnp.asarray(twi), ftwr, ftwi)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_r", "interpret", "radices"))
+def rfft_t_pallas(x: jax.Array, *, tile_r: int = 8, interpret: bool = False,
+                  radices: tuple[int, ...] = DEFAULT_RADICES):
+    """Fused R2C + transposed write: (B, R, C) f32 -> (B, C/2+1, R) re/im."""
+    b, r, c = x.shape
+    assert c & (c - 1) == 0 and c >= 4, f"pow2 C >= 4 only, got {c}"
+    assert r % tile_r == 0, (r, tile_r)
+    m = c // 2
+    grid = (b, r // tile_r)
+    in_spec = pl.BlockSpec((1, tile_r, c), lambda i, j: (i, j, 0))
+    out_spec = pl.BlockSpec((1, m + 1, tile_r), lambda i, j: (i, 0, j))
+    twr, twi = packed_stage_twiddles(m, radices)
+    tw_spec = pl.BlockSpec(twr.shape, lambda i, j: (0, 0))
+    swr, swi = rfft_split_twiddles(c).real, rfft_split_twiddles(c).imag
+    swr = jnp.asarray(swr, jnp.float32).reshape(1, -1)
+    swi = jnp.asarray(swi, jnp.float32).reshape(1, -1)
+    sw_spec = pl.BlockSpec((1, m + 1), lambda i, j: (0, 0))
+    out_shape = [jax.ShapeDtypeStruct((b, m + 1, r), x.dtype)] * 2
+    fn = pl.pallas_call(
+        functools.partial(_r2c_t_body, n=c, radices=radices),
+        grid=grid,
+        in_specs=[in_spec, tw_spec, tw_spec, sw_spec, sw_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(x, jnp.asarray(twr), jnp.asarray(twi), swr, swi)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_r", "tile_c", "interpret"))
+def transpose_pallas(*planes: jax.Array, tile_r: int = 8, tile_c: int = 128,
+                     interpret: bool = False):
+    """Tiled last-two-axes transpose: k (B, R, C) planes -> k (B, C, R).
+
+    Reads row-major (tile_r, tile_c) windows, writes them column-major —
+    one HBM read + one write instead of an XLA transpose pair around a
+    separate kernel.  Used for the plan graph's explicit transpose nodes
+    (non-pow2 axes whose FFT pass cannot fuse the hand-off).
+    """
+    b, r, c = planes[0].shape
+    assert r % tile_r == 0 and c % tile_c == 0, (r, c, tile_r, tile_c)
+    grid = (b, r // tile_r, c // tile_c)
+    in_spec = pl.BlockSpec((1, tile_r, tile_c), lambda i, j, k: (i, j, k))
+    out_spec = pl.BlockSpec((1, tile_c, tile_r), lambda i, j, k: (i, k, j))
+    out_shape = [jax.ShapeDtypeStruct((b, c, r), p.dtype) for p in planes]
+    fn = pl.pallas_call(
+        _transpose_body,
+        grid=grid,
+        in_specs=[in_spec] * len(planes),
+        out_specs=[out_spec] * len(planes),
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return tuple(fn(*planes))
 
 
 @functools.partial(jax.jit,

@@ -6,7 +6,12 @@ import jax.numpy as jnp
 
 from repro.fft.radix import DEFAULT_RADICES
 from repro.kernels.common import batch_tile, use_interpret
-from repro.kernels.fft.fft_kernel import fft_pallas, irfft_pallas, rfft_pallas
+from repro.kernels.fft.fft_kernel import (fft_axis1_pallas,
+                                          fft_axis1_twiddle_pallas,
+                                          fft_pallas, fft_t_pallas,
+                                          fft_t_twiddle_pallas, irfft_pallas,
+                                          rfft_pallas, rfft_t_pallas,
+                                          transpose_pallas)
 
 # One fused pass handles transforms that fit VMEM alongside work buffers.
 MAX_KERNEL_N = 2**13
@@ -70,6 +75,144 @@ def fft_kernel_c2c(x: jax.Array, *, inverse: bool = False,
     if out_re.shape[0] != b:
         out_re, out_im = out_re[:b], out_im[:b]
     return (out_re + 1j * out_im).reshape(*lead, n)
+
+
+def _row_tile(r: int, c: int, elem_bytes: int = 4, buffers: int = 10) -> int:
+    """Largest row tile that divides ``r`` and fits the VMEM budget.
+
+    A divisor search (not pow2 halving): ``batch_tile`` returns
+    lane-aligned but often non-pow2 budgets, and halving those would
+    collapse to tile=1 for the pow2 row counts the fused passes serve.
+    """
+    tile = max(min(batch_tile(c, elem_bytes, buffers=buffers), r), 1)
+    while tile > 1 and r % tile:
+        tile -= 1
+    return tile
+
+
+def _flatten3(x: jax.Array) -> tuple[jax.Array, tuple[int, ...]]:
+    """Collapse leading dims to one batch axis: (..., R, C) -> (b, R, C)."""
+    lead = x.shape[:-2]
+    b = 1
+    for d in lead:
+        b *= d
+    return x.reshape(b, *x.shape[-2:]), lead
+
+
+def fft_kernel_c2c_t(x: jax.Array, *, twiddle=None, inverse: bool = False,
+                     interpret: bool | None = None,
+                     radices: tuple[int, ...] = DEFAULT_RADICES) -> jax.Array:
+    """Fused C2C FFT + transposed write: (..., R, C) -> (..., C, R).
+
+    The hand-off transpose of a 2-D / N-D / four-step transform rides the
+    FFT pass: each (tile_r, C) row tile is transformed in VMEM and written
+    into its (C, tile_r) column window — one HBM read + one write total.
+
+    ``twiddle`` (optional, an (R, C) complex table) fuses the four-step
+    inter-pass multiply as a kernel epilogue, deleting the separate XLA
+    multiply pass of the unfused path.
+    """
+    if interpret is None:
+        interpret = use_interpret()
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.complexfloating):
+        x = x.astype(jnp.complex64)
+    r, c = x.shape[-2:]
+    _check_kernel_length(c)
+    flat, lead = _flatten3(x)
+    re = flat.real.astype(jnp.float32)
+    im = flat.imag.astype(jnp.float32)
+    tile = _row_tile(r, c)
+    if twiddle is not None:
+        tw = jnp.asarray(twiddle)
+        ftwr = tw.real.astype(jnp.float32)
+        ftwi = tw.imag.astype(jnp.float32)
+        out_re, out_im = fft_t_twiddle_pallas(
+            re, im, ftwr, ftwi, tile_r=tile, inverse=inverse,
+            interpret=interpret, radices=radices)
+    else:
+        out_re, out_im = fft_t_pallas(re, im, tile_r=tile, inverse=inverse,
+                                      interpret=interpret, radices=radices)
+    return (out_re + 1j * out_im).reshape(*lead, c, r)
+
+
+def fft_kernel_c2c_axis1(x: jax.Array, *, twiddle=None,
+                         inverse: bool = False,
+                         interpret: bool | None = None,
+                         radices: tuple[int, ...] = DEFAULT_RADICES
+                         ) -> jax.Array:
+    """C2C FFT over axis -2, layout preserved: (..., R, C) -> (..., R, C).
+
+    The four-step column pass: transpose-read + FFT + optional twiddle
+    epilogue + transpose-write, all in VMEM (one HBM round trip).
+    ``twiddle`` is a (C, R) complex table; output ``[..., k, j]`` is
+    multiplied by ``twiddle[j, k]``.
+    """
+    if interpret is None:
+        interpret = use_interpret()
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.complexfloating):
+        x = x.astype(jnp.complex64)
+    r, c = x.shape[-2:]
+    _check_kernel_length(r)
+    flat, lead = _flatten3(x)
+    re = flat.real.astype(jnp.float32)
+    im = flat.imag.astype(jnp.float32)
+    tile = _row_tile(c, r)
+    if twiddle is not None:
+        tw = jnp.asarray(twiddle)
+        ftwr = tw.real.astype(jnp.float32)
+        ftwi = tw.imag.astype(jnp.float32)
+        out_re, out_im = fft_axis1_twiddle_pallas(
+            re, im, ftwr, ftwi, tile_c=tile, inverse=inverse,
+            interpret=interpret, radices=radices)
+    else:
+        out_re, out_im = fft_axis1_pallas(re, im, tile_c=tile,
+                                          inverse=inverse,
+                                          interpret=interpret,
+                                          radices=radices)
+    return (out_re + 1j * out_im).reshape(*lead, r, c)
+
+
+def fft_kernel_r2c_t(x: jax.Array, *, interpret: bool | None = None,
+                     radices: tuple[int, ...] = DEFAULT_RADICES) -> jax.Array:
+    """Fused R2C + transposed write: (..., R, C) real -> (..., C/2+1, R)."""
+    if interpret is None:
+        interpret = use_interpret()
+    x = jnp.asarray(x)
+    if jnp.issubdtype(x.dtype, jnp.complexfloating):
+        x = x.real
+    r, c = x.shape[-2:]
+    _check_kernel_length(max(c // 2, 1))
+    if c < 4:
+        raise ValueError(f"fused R2C needs C >= 4, got {c}")
+    flat, lead = _flatten3(x.astype(jnp.float32))
+    tile = _row_tile(r, c)
+    out_re, out_im = rfft_t_pallas(flat, tile_r=tile, interpret=interpret,
+                                   radices=radices)
+    return (out_re + 1j * out_im).reshape(*lead, c // 2 + 1, r)
+
+
+def transpose_kernel(x: jax.Array, *,
+                     interpret: bool | None = None) -> jax.Array:
+    """Tiled last-two-axes transpose: (..., R, C) -> (..., C, R), one pass.
+
+    Complex inputs travel as split re/im planes (TPU Pallas wants real
+    dtypes); each plane is transposed tile by tile in VMEM.
+    """
+    if interpret is None:
+        interpret = use_interpret()
+    x = jnp.asarray(x)
+    r, c = x.shape[-2:]
+    flat, lead = _flatten3(x)
+    tr = _row_tile(r, max(c, 1), buffers=4)
+    tc = _row_tile(c, max(r, 1), buffers=4)
+    if jnp.issubdtype(x.dtype, jnp.complexfloating):
+        re, im = transpose_pallas(flat.real, flat.imag, tile_r=tr, tile_c=tc,
+                                  interpret=interpret)
+        return (re + 1j * im).astype(x.dtype).reshape(*lead, c, r)
+    (out,) = transpose_pallas(flat, tile_r=tr, tile_c=tc, interpret=interpret)
+    return out.reshape(*lead, c, r)
 
 
 def fft_kernel_r2c(x: jax.Array, *, interpret: bool | None = None,

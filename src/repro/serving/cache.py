@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable
+from typing import Any, Callable
 
 import jax
 
@@ -49,7 +49,7 @@ class CacheEntry:
     """Everything the executor needs for one shape."""
 
     key: ShapeKey
-    plan: FFTPlan | None        # None for pipeline (pulsar) requests
+    plan: FFTPlan | Any | None  # NDPlan for N-D; None for pulsar requests
     fn: Callable                # jitted executable for the shape
     profile: WorkloadProfile    # analytic workload model of one full batch
     sweep: dvfs.SweepResult     # full clock-grid sweep for ``profile``
@@ -78,7 +78,9 @@ class PlanSweepCache:
         device: DeviceSpec,
         *,
         batch_bytes: float,
-        plan_fn: Callable[[int], FFTPlan] = plan_for_length,
+        # Called as plan_fn(n) for c2c keys and plan_fn(n, kind) for real
+        # transforms — single-arg injectables only serve c2c traffic.
+        plan_fn: Callable[..., FFTPlan] = plan_for_length,
         sweep_fn: Callable[..., dvfs.SweepResult] = dvfs.sweep,
         power_model: PowerModel | None = None,
     ):
@@ -115,17 +117,23 @@ class PlanSweepCache:
 
     def _build_fft(self, key: ShapeKey):
         self.stats.plan_builds += 1
-        # The injectable plan_fn keeps its historical (n) signature for
-        # C2C; real transforms pass the kind through plan_for_length-style
-        # two-argument callables.
-        if key.transform == "c2c":
+        if key.shape:
+            # N-D shapes are first-class: one plan graph (fused
+            # transpose-write passes) + one sweep per distinct shape.
+            from repro.fft.plan_nd import plan_nd
+            plan = plan_nd(key.shape, key.transform)
+        elif key.transform == "c2c":
+            # The injectable plan_fn keeps its historical (n) signature
+            # for C2C; real transforms pass the kind through
+            # plan_for_length-style two-argument callables.
             plan = self._plan_fn(key.n)
         else:
             plan = self._plan_fn(key.n, key.transform)
         fn = jax.jit(plan.fn)
-        case = FFTCase(n=key.n, precision=key.precision,
+        case = FFTCase(n=0 if key.shape else key.n, precision=key.precision,
                        batch_bytes=self.batch_bytes,
-                       transform=key.transform)
+                       transform=key.transform,
+                       shape=key.shape or None)
         profile = fft_workload(case, self.device)
         return plan, fn, profile, case.n_fft
 

@@ -11,7 +11,7 @@ import dataclasses
 import itertools
 from typing import Any
 
-from repro.core.workloads import COMPLEX_BYTES
+from repro.core.workloads import COMPLEX_BYTES, is_pow2
 
 _REQUEST_IDS = itertools.count()
 
@@ -27,6 +27,12 @@ class ShapeKey:
     The latency budget is deliberately NOT part of the key — budgets only
     re-select a point from the cached sweep (SweepResult.optimal_under_budget),
     they never require re-planning or re-sweeping.
+
+    ``shape`` makes N-D transforms first-class: () for the 1-D workload,
+    the transform-axes lengths (e.g. a 2-D image's (n0, n1)) otherwise —
+    each distinct shape compiles one plan graph (repro.fft.plan_nd) and
+    one sweep, cached forever.  ``n`` is always the total points per
+    transform, so Eq. 6 batch caps work unchanged.
     """
 
     kind: str
@@ -35,6 +41,12 @@ class ShapeKey:
     n_harmonics: int = 0            # pulsar requests only; 0 for plain FFTs
     device: str = ""
     transform: str = "c2c"          # "c2c" | "r2c" — distinct plans + sweeps
+    shape: tuple[int, ...] = ()     # N-D transform-axes lengths; () for 1-D
+
+    @property
+    def last_axis(self) -> int:
+        """The axis length R2C packing applies to (the last transform axis)."""
+        return self.shape[-1] if self.shape else self.n
 
     @property
     def elem_bytes(self) -> int:
@@ -43,24 +55,33 @@ class ShapeKey:
         R2C payloads at pow2 lengths execute as real arrays — half the
         complex footprint, so Eq. 6 fits twice as many per batch.  Non-pow2
         r2c falls back to the full C2C algorithm (repro.fft.plan), so it
-        pays complex bytes and must be capped accordingly.
+        pays complex bytes and must be capped accordingly.  N-D payloads
+        pack along the last transform axis.  Must stay in lockstep with
+        ``core.workloads.FFTCase.elem_bytes`` (the cost-model twin).
         """
         full = COMPLEX_BYTES[self.precision]
-        if self.transform == "r2c" and self.n & (self.n - 1) == 0:
+        if self.transform == "r2c" and is_pow2(self.last_axis):
             return full // 2
         return full
 
 
 @dataclasses.dataclass
 class FFTRequest:
-    """One client submission: ``x`` rows are independent transforms."""
+    """One client submission: ``x`` rows are independent transforms.
 
-    x: Any                               # (batch, n) or (n,) array-like
+    ``ndim`` is the transform rank: 1 (default) serves the paper's 1-D
+    workload from (batch, n) / (n,) payloads; 2+ serves N-D transforms
+    from (batch, *shape) / (*shape,) payloads through the plan-graph
+    engine (one fused pass per pow2 axis).
+    """
+
+    x: Any                               # (batch, *shape) or (*shape,) array
     precision: str = "fp32"
     kind: str = KIND_FFT
     latency_budget: float | None = None  # max tolerable slowdown vs boost
     n_harmonics: int = 32                # pulsar kind only
     transform: str = "c2c"               # "c2c" or "r2c" (real payloads)
+    ndim: int = 1                        # transform rank (2 for fft2 jobs)
     request_id: int = dataclasses.field(
         default_factory=lambda: next(_REQUEST_IDS))
     t_enqueue: float = 0.0               # stamped by the service
@@ -75,22 +96,38 @@ class FFTRequest:
         if self.transform not in ("c2c", "r2c"):
             raise ValueError(f"unknown transform {self.transform!r}; "
                              "have ('c2c', 'r2c')")
+        if self.ndim < 1:
+            raise ValueError(f"transform rank must be >= 1, got {self.ndim}")
+        if self.ndim > 1 and self.kind != KIND_FFT:
+            raise ValueError("N-D payloads are FFT requests only")
         # Reject malformed payloads at submit time so one bad request can
         # never poison a whole serving cycle.
         ndim = getattr(self.x, "ndim", None)
-        if ndim not in (1, 2) or self.x.shape[-1] < 1:
+        if (ndim not in (self.ndim, self.ndim + 1)
+                or any(d < 1 for d in self.x.shape)):
             raise ValueError(
-                f"payload must be a (batch, n) or (n,) array with n >= 1; "
+                f"rank-{self.ndim} payload must be (batch, *shape) or "
+                f"(*shape,) with positive dims; "
                 f"got shape {getattr(self.x, 'shape', None)}")
 
     @property
+    def shape(self) -> tuple[int, ...]:
+        """Transform-axes lengths (the trailing ``ndim`` payload dims)."""
+        return tuple(int(d) for d in self.x.shape[-self.ndim:])
+
+    @property
     def n(self) -> int:
-        return int(self.x.shape[-1])
+        """Total points per transform (product over the transform axes)."""
+        prod = 1
+        for d in self.shape:
+            prod *= d
+        return prod
 
     @property
     def batch(self) -> int:
         """Number of independent transforms in this request."""
-        return int(self.x.shape[0]) if self.x.ndim == 2 else 1
+        return (int(self.x.shape[0])
+                if self.x.ndim == self.ndim + 1 else 1)
 
     @property
     def bytes(self) -> int:
@@ -106,7 +143,8 @@ class FFTRequest:
         return ShapeKey(
             kind=self.kind, n=self.n, precision=self.precision,
             n_harmonics=self.n_harmonics if self.kind == KIND_PULSAR else 0,
-            device=device_name, transform=self.transform)
+            device=device_name, transform=self.transform,
+            shape=self.shape if self.ndim > 1 else ())
 
 
 @dataclasses.dataclass

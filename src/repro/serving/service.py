@@ -154,17 +154,22 @@ class FFTService:
         latency_budget: float | None = None,
         n_harmonics: int = 32,
         transform: str = "c2c",
+        ndim: int = 1,
     ) -> FFTRequest:
-        """Enqueue one request (a (batch, n) or (n,) array); returns it.
+        """Enqueue one request (a (batch, *shape) or (*shape,) array).
 
         ``transform="r2c"`` serves real payloads through the R2C plan —
         half the energy per transform at the same length (Eq. 5/6).
-        The request's receipt becomes available after the next drain():
+        ``ndim=2`` serves 2-D transforms (e.g. imaging grids) through the
+        N-D plan graph — one fused kernel pass per pow2 axis — with their
+        own first-class plan + sweep cache entries.  The request's receipt
+        becomes available after the next drain():
         ``service.receipt(request)``.
         """
         req = FFTRequest(x=jnp.asarray(x), precision=precision, kind=kind,
                          latency_budget=latency_budget,
-                         n_harmonics=n_harmonics, transform=transform)
+                         n_harmonics=n_harmonics, transform=transform,
+                         ndim=ndim)
         req.t_enqueue = self._timer()
         self._pending.append(req)
         return req
@@ -216,7 +221,12 @@ class FFTService:
                 if r.request_id in self._receipts]   # cap may have evicted
 
     def _stack(self, batch: Batch) -> jax.Array:
-        rows = [jnp.atleast_2d(r.x) for r in batch.requests]
+        if batch.key.shape:
+            # N-D payloads: normalise every request to (rows, *shape).
+            rows = [r.x.reshape((-1, *batch.key.shape))
+                    for r in batch.requests]
+        else:
+            rows = [jnp.atleast_2d(r.x) for r in batch.requests]
         x = jnp.concatenate(rows, axis=0) if len(rows) > 1 else rows[0]
         if batch.key.kind == KIND_FFT:
             if batch.key.transform == "r2c":

@@ -195,7 +195,6 @@ class _CountingKernel:
 
 @pytest.mark.parametrize("n,algorithm", [
     (2**9, "stockham"),       # single fused pass
-    (2**14, "four-step"),     # two kernel passes (n1=128, n2=128)
     (45, "bluestein"),        # two kernel passes at m=128
 ])
 def test_plans_route_through_pallas_kernel(monkeypatch, n, algorithm):
@@ -213,6 +212,26 @@ def test_plans_route_through_pallas_kernel(monkeypatch, n, algorithm):
     assert counter.calls >= (2 if algorithm != "stockham" else 1)
 
 
+def test_four_step_plan_runs_two_fused_kernel_passes(monkeypatch):
+    """Acceptance: the long-N plan is exactly TWO fused kernel passes —
+    column FFT + twiddle epilogue, then row FFT + transposed write.  No
+    plain kernel launches, no separate twiddle / transpose ops."""
+    col = _CountingKernel(plan_mod.fft_kernel_c2c_axis1)
+    row = _CountingKernel(plan_mod.fft_kernel_c2c_t)
+    plain = _CountingKernel(plan_mod.fft_kernel_c2c)
+    monkeypatch.setattr(plan_mod, "_kernel_fft_axis1", col)
+    monkeypatch.setattr(plan_mod, "_kernel_fft_t", row)
+    monkeypatch.setattr(plan_mod, "_kernel_fft", plain)
+    n = 2**14
+    plan = plan_for_length(n)
+    assert plan.algorithm == "four-step"
+    assert plan.passes == 2
+    x = rand_complex((3, n))
+    np.testing.assert_allclose(plan(x), jnp.fft.fft(x), rtol=3e-3, atol=3e-3)
+    assert col.calls == 1 and row.calls == 1
+    assert plain.calls == 0          # no hidden unfused passes
+
+
 def test_r2c_plan_routes_through_pallas_kernel(monkeypatch):
     counter = _CountingKernel(plan_mod.fft_kernel_r2c)
     monkeypatch.setattr(plan_mod, "_kernel_rfft", counter)
@@ -225,9 +244,10 @@ def test_r2c_plan_routes_through_pallas_kernel(monkeypatch):
 @pytest.mark.parametrize("n", [2**9, 2**14, 45])
 def test_plans_fall_back_without_pallas(monkeypatch, n):
     """With the kernel unavailable every plan stays correct (pure JAX)."""
-    monkeypatch.setattr(plan_mod, "_kernel_fft", None)
-    monkeypatch.setattr(plan_mod, "_kernel_rfft", None)
-    monkeypatch.setattr(plan_mod, "_kernel_irfft", None)
+    for hook in ("_kernel_fft", "_kernel_rfft", "_kernel_irfft",
+                 "_kernel_fft_t", "_kernel_fft_axis1", "_kernel_rfft_t",
+                 "_kernel_transpose"):
+        monkeypatch.setattr(plan_mod, hook, None)
     x = rand_complex((5, n))
     np.testing.assert_allclose(plan_for_length(n)(x), jnp.fft.fft(x),
                                rtol=3e-3, atol=3e-3)
