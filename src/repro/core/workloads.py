@@ -309,6 +309,144 @@ def _nd_fft_workload(
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class ConvCase:
+    """One overlap-save matched-filter configuration (the FDAS workload).
+
+    ``n`` complex points per row are convolved against a bank of
+    ``templates`` filters of ``taps`` points each through the segmented
+    engine (``repro.fft.convolve``); ``nfft=0`` lets the engine's cost
+    model pick the segment length.  ``batch_bytes`` sizes the batch by
+    the Eq. 6 memory budget, exactly like :class:`FFTCase`.
+    """
+
+    n: int
+    templates: int
+    taps: int
+    nfft: int = 0
+    precision: str = "fp32"
+    batch_bytes: float = 2e9
+    radices: tuple[int, ...] | None = None
+    name: str = ""
+
+    def __post_init__(self):
+        if self.n < 1:
+            raise ValueError(f"ConvCase needs n >= 1, got {self.n}")
+        if self.templates < 1 or self.taps < 1:
+            raise ValueError(
+                f"ConvCase needs templates/taps >= 1, got "
+                f"{self.templates}/{self.taps}")
+        if self.precision not in COMPLEX_BYTES:
+            raise ValueError(f"unknown precision {self.precision!r}")
+        if not self.name:
+            object.__setattr__(
+                self, "name",
+                f"conv-n{self.n}-t{self.templates}x{self.taps}"
+                f"-{self.precision}")
+
+    @property
+    def plan(self):
+        """The memoised overlap-save plan (segmentation + pass counts)."""
+        from repro.fft.convolve import conv_plan
+        return conv_plan(self.n, self.taps, self.templates, self.nfft)
+
+    @property
+    def n_rows(self) -> int:
+        """Eq. 6: complex rows per memory-budgeted batch."""
+        return max(int(self.batch_bytes
+                       // (self.n * COMPLEX_BYTES[self.precision])), 1)
+
+
+def conv_workload(case: ConvCase, device: DeviceSpec) -> WorkloadProfile:
+    """Analytic profile of one batched overlap-save matched-filter plane.
+
+    Pass and traffic counts come straight from the engine's own plan
+    (``ConvPlan``: one fused forward pass feeding T filters, T inverse
+    passes, zero standalone multiply passes), so the DVFS model and the
+    implementation stay consistent the same way ``fft_workload`` and
+    ``repro.fft.plan`` do.
+    """
+    plan = case.plan
+    rows = case.n_rows
+    t = case.templates
+    seg_pts = plan.n_segments * plan.nfft
+    scale = COMPLEX_BYTES[case.precision] / 8.0    # plan bytes are complex64
+    hbm_bytes = plan.os_bytes * scale * rows
+    flops = ((1 + t) * _butterfly_flops(plan.nfft, case.radices)
+             * plan.n_segments + 6.0 * t * seg_pts) * rows
+    # Every fused pass exchanges its working set once per butterfly stage.
+    stages = _stage_count(plan.nfft, case.radices)
+    cache_bytes = 2.0 * seg_pts * 8.0 * scale * rows * stages * (1 + t)
+    peak = device.peak_flops * PRECISION_PEAK[case.precision]
+    return WorkloadProfile(
+        name=case.name,
+        t_mem=hbm_bytes / device.hbm_bandwidth,
+        t_issue=flops / (peak * device.issue_efficiency),
+        t_cache=cache_bytes / device.cache_bandwidth,
+        t_compute=flops / peak,
+        contention=0.01,
+        flops=flops,
+    )
+
+
+def fdas_workload(case: ConvCase, device: DeviceSpec, *,
+                  series_n: int | None = None) -> list[WorkloadProfile]:
+    """Per-stage profiles of the acceleration search (Sec. 5.3 applied to
+    the White et al. workload): R2C FFT -> template convolution ->
+    power/threshold detection.
+
+    ``case.n`` is the half-spectrum length; ``series_n`` overrides the
+    time-series length (default ``2 * (n - 1)``).  The returned stages
+    feed ``core.dvfs.sweep`` / ``core.scheduler.DVFSScheduler`` exactly
+    like ``fft.pipeline.stage_profiles`` — but here the FFT-class stages
+    (R2C + convolution) dominate, so the composite Table-4 saving is far
+    closer to the FFT-only figure.
+    """
+    if series_n is None:
+        series_n = 2 * (case.n - 1)
+    fft_prof = fft_workload(
+        FFTCase(n=series_n, precision=case.precision,
+                batch_bytes=case.batch_bytes, transform="r2c",
+                radices=case.radices, name="fdas-fft"),
+        device,
+    )
+    conv_prof = dataclasses.replace(conv_workload(case, device),
+                                    name="fdas-conv")
+    # Detection: read the (T, nbins) plane, write power + the top-k pass.
+    rows = case.n_rows
+    plane = float(case.templates * case.n * rows)
+    det_bytes = plane * (8.0 + 4.0) * (COMPLEX_BYTES[case.precision] / 8.0)
+    det_flops = 5.0 * plane
+    peak = device.peak_flops * PRECISION_PEAK[case.precision]
+    detect = WorkloadProfile(
+        name="fdas-detect",
+        t_mem=det_bytes / device.hbm_bandwidth,
+        t_issue=det_flops / (peak * 0.4),
+        t_compute=det_flops / peak,
+        flops=det_flops,
+    )
+    return [fft_prof, conv_prof, detect]
+
+
+def fdas_total_profile(case: ConvCase, device: DeviceSpec, *,
+                       series_n: int | None = None) -> WorkloadProfile:
+    """All FDAS stages merged into one profile (service-level sweeps)."""
+    profs = fdas_workload(case, device, series_n=series_n)
+    t_mem = sum(p.t_mem for p in profs)
+    contention = (sum(p.contention * p.t_mem for p in profs) / t_mem
+                  if t_mem > 0 else 0.0)
+    return WorkloadProfile(
+        name=f"fdas-n{case.n}-t{case.templates}",
+        t_mem=t_mem,
+        t_issue=sum(p.t_issue for p in profs),
+        t_cache=sum(p.t_cache for p in profs),
+        t_compute=sum(p.t_compute for p in profs),
+        t_coll=sum(p.t_coll for p in profs),
+        contention=contention,
+        flops=sum(p.flops for p in profs),
+    )
+
+
 def roofline_workload(
     name: str,
     device: DeviceSpec,

@@ -7,16 +7,21 @@
                chirp/filter factors cached per length
   multidim     2-D/3-D transforms by axis decomposition (paper Eq. 2)
   plan_nd      N-D plan-graph compiler: fused transpose-write passes
+  convolve     batched overlap-save segmented FFT convolution (filter
+               banks as fused multiply epilogues, cached filter spectra)
   distributed  pencil/four-step FFT across a device mesh (shard_map)
   pipeline     the paper's pulsar-search pipeline (Sec. 5.3)
   plan         per-length algorithm choice + Pallas kernel routing
 """
 from repro.fft.bluestein import bluestein_fft
+from repro.fft.convolve import (ConvPlan, conv_plan, overlap_save_conv,
+                                select_nfft)
 from repro.fft.multidim import fft2, fftn, rfft2, rfftn
 from repro.fft.stockham import fft, ifft, irfft, rfft
-from repro.fft.plan import plan_for_length, pow2_fft, FFTPlan
+from repro.fft.plan import fft_mul, plan_for_length, pow2_fft, FFTPlan
 from repro.fft.plan_nd import NDPlan, plan_nd
 
 __all__ = ["fft", "ifft", "rfft", "irfft", "fft2", "rfft2", "fftn",
            "rfftn", "bluestein_fft", "plan_for_length", "pow2_fft",
-           "FFTPlan", "NDPlan", "plan_nd"]
+           "fft_mul", "FFTPlan", "NDPlan", "plan_nd", "ConvPlan",
+           "conv_plan", "overlap_save_conv", "select_nfft"]

@@ -55,6 +55,7 @@ MAX_SINGLE_PASS = 2**13
 try:
     from repro.kernels.fft.ops import (MAX_KERNEL_N, fft_kernel_c2c,
                                        fft_kernel_c2c_axis1,
+                                       fft_kernel_c2c_mul,
                                        fft_kernel_c2c_t, fft_kernel_c2r,
                                        fft_kernel_r2c, fft_kernel_r2c_t,
                                        transpose_kernel)
@@ -65,11 +66,13 @@ try:
     _kernel_fft_axis1: Callable | None = fft_kernel_c2c_axis1
     _kernel_rfft_t: Callable | None = fft_kernel_r2c_t
     _kernel_transpose: Callable | None = transpose_kernel
+    _kernel_fft_mul: Callable | None = fft_kernel_c2c_mul
 except Exception:                                     # pragma: no cover
     MAX_KERNEL_N = MAX_SINGLE_PASS
     _kernel_fft = _kernel_rfft = _kernel_irfft = None
     _kernel_fft_t = _kernel_fft_axis1 = None
     _kernel_rfft_t = _kernel_transpose = None
+    _kernel_fft_mul = None
 
 
 def _pallas_enabled() -> bool:
@@ -100,6 +103,30 @@ def pow2_fft(x: jax.Array, *, inverse: bool = False) -> jax.Array:
 
 def _is_pow2(n: int) -> bool:
     return n > 0 and (n & (n - 1)) == 0
+
+
+def fft_mul(x: jax.Array, bank) -> jax.Array:
+    """Forward pow2 C2C FFT fused with a (T, N) filter-bank multiply.
+
+    (..., N) in -> (..., T, N) out: out[..., t, :] = FFT(x) * bank[t].
+    The overlap-save convolution engine's forward pass: the bank multiply
+    rides the FFT kernel as an in-VMEM epilogue (``fft_kernel_c2c_mul``),
+    so a T-template matched-filter plane costs forward + T inverse passes
+    with zero standalone multiply passes.  The fallback (Pallas missing
+    or disabled) pays the routed FFT plus ONE XLA broadcast multiply —
+    numerically identical, one extra HBM round trip of the plane.
+    """
+    x = _as_complex(x)
+    n = x.shape[-1]
+    kern = _kernel_fft_mul
+    if (kern is not None and _is_pow2(n) and 1 < n <= MAX_KERNEL_N
+            and _pallas_enabled()):
+        try:
+            return kern(x, bank)
+        except Exception:                             # graceful fallback
+            pass
+    y = pow2_fft(x)
+    return y[..., None, :] * jnp.asarray(bank).astype(y.dtype)
 
 
 # ---------------------------------------------------------------------------

@@ -24,6 +24,15 @@ import numpy as np
 #: Default schedule for the TPU engine: radix-4 stages with a radix-2 tail.
 DEFAULT_RADICES = (4, 2)
 
+
+def is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= ``n`` (for n >= 1)."""
+    return 1 << max(n - 1, 0).bit_length()
+
 #: The cuFFT-flavoured schedule the paper's GPU measurements correspond to.
 CUFFT_RADICES = (8, 4, 2)
 

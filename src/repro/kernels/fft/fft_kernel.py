@@ -200,6 +200,62 @@ def _fft_axis1_twiddle_body(re_ref, im_ref, twr_ref, twi_ref, ftwr_ref,
     out_im_ref[...] = out_im.T[None]
 
 
+def _c2c_mul_body(re_ref, im_ref, twr_ref, twi_ref, fbr_ref, fbi_ref,
+                  out_re_ref, out_im_ref, *, n: int,
+                  radices: tuple[int, ...], inverse: bool):
+    """FFT a (tile_b, n) tile, then multiply by a (T, n) filter bank.
+
+    The bank multiply is a fused epilogue: the transformed tile is still
+    resident in VMEM when it is broadcast against every filter row, so
+    the (tile_b, T, n) product plane costs one HBM read of the tile plus
+    one write of the plane — the standalone multiply pass of the unfused
+    matched-filter formulation disappears.
+    """
+    xr, xi = _mixed_radix_stages(
+        re_ref[...], im_ref[...], n, twr_ref[...], twi_ref[...],
+        radices=radices, inverse=inverse)
+    out_re, out_im = _cmul(xr[:, None, :], xi[:, None, :],
+                           fbr_ref[...][None], fbi_ref[...][None])
+    out_re_ref[...] = out_re
+    out_im_ref[...] = out_im
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_b", "inverse", "interpret",
+                                    "radices"))
+def fft_mul_pallas(re: jax.Array, im: jax.Array, fbr: jax.Array,
+                   fbi: jax.Array, *, tile_b: int = 8,
+                   inverse: bool = False, interpret: bool = False,
+                   radices: tuple[int, ...] = DEFAULT_RADICES):
+    """Batched pow2 C2C FFT fused with a (T, N) filter-bank multiply.
+
+    (B, N) re/im in, (B, T, N) re/im out: out[b, t] = FFT(x[b]) * f[t].
+    The whole bank stays pinned in VMEM across grid steps, exactly like
+    the stage-twiddle table.
+    """
+    b, n = re.shape
+    t = fbr.shape[0]
+    assert n & (n - 1) == 0, f"pow2 lengths only, got {n}"
+    assert b % tile_b == 0, (b, tile_b)
+    assert fbr.shape == (t, n), (fbr.shape, t, n)
+    grid = (b // tile_b,)
+    in_spec = pl.BlockSpec((tile_b, n), lambda i: (i, 0))
+    fb_spec = pl.BlockSpec((t, n), lambda i: (0, 0))
+    out_spec = pl.BlockSpec((tile_b, t, n), lambda i: (i, 0, 0))
+    twr, twi, tw_spec = _tables(n, radices)
+    out_shape = [jax.ShapeDtypeStruct((b, t, n), re.dtype)] * 2
+    fn = pl.pallas_call(
+        functools.partial(_c2c_mul_body, n=n, radices=radices,
+                          inverse=inverse),
+        grid=grid,
+        in_specs=[in_spec, in_spec, tw_spec, tw_spec, fb_spec, fb_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(re, im, twr, twi, fbr, fbi)
+
+
 def _r2c_tile(x, twr, twi, swr, swi, *, n: int, radices: tuple[int, ...]):
     """Packed R2C of a (b, n) real tile -> (b, n/2+1) re/im planes."""
     b = x.shape[0]

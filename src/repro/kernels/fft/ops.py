@@ -8,7 +8,8 @@ from repro.fft.radix import DEFAULT_RADICES
 from repro.kernels.common import batch_tile, use_interpret
 from repro.kernels.fft.fft_kernel import (fft_axis1_pallas,
                                           fft_axis1_twiddle_pallas,
-                                          fft_pallas, fft_t_pallas,
+                                          fft_mul_pallas, fft_pallas,
+                                          fft_t_pallas,
                                           fft_t_twiddle_pallas, irfft_pallas,
                                           rfft_pallas, rfft_t_pallas,
                                           transpose_pallas)
@@ -75,6 +76,47 @@ def fft_kernel_c2c(x: jax.Array, *, inverse: bool = False,
     if out_re.shape[0] != b:
         out_re, out_im = out_re[:b], out_im[:b]
     return (out_re + 1j * out_im).reshape(*lead, n)
+
+
+def fft_kernel_c2c_mul(x: jax.Array, bank, *, inverse: bool = False,
+                       interpret: bool | None = None,
+                       radices: tuple[int, ...] = DEFAULT_RADICES
+                       ) -> jax.Array:
+    """Fused pow2 C2C FFT + (T, N) filter-bank multiply epilogue.
+
+    (..., N) in -> (..., T, N) out with out[..., t, :] = FFT(x) * bank[t].
+    The bank multiply happens in VMEM on the transformed tile — the
+    matched-filter plane of a T-template search costs one forward pass
+    (this kernel) plus T inverse passes, with no standalone multiply
+    pass.  ``bank`` is a host-side (T, N) complex array (the cached
+    filter spectra of ``repro.fft.convolve``).
+    """
+    if interpret is None:
+        interpret = use_interpret()
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.complexfloating):
+        x = x.astype(jnp.complex64)
+    n = x.shape[-1]
+    _check_kernel_length(n)
+    bank = jnp.asarray(bank)
+    if bank.ndim != 2 or bank.shape[-1] != n:
+        raise ValueError(
+            f"filter bank must be (T, {n}), got {bank.shape}")
+    t = bank.shape[0]
+    fbr = bank.real.astype(jnp.float32)
+    fbi = bank.imag.astype(jnp.float32)
+    flat, lead, b = _flatten(x)
+    re = flat.real.astype(jnp.float32)
+    im = flat.imag.astype(jnp.float32)
+    # The output plane is T x the input tile; scale the VMEM budget so
+    # input, bank and product planes coexist.
+    (re, im), tile = _tile_and_pad([re, im], b, n * (4 + 2 * t) // 8)
+    out_re, out_im = fft_mul_pallas(re, im, fbr, fbi, tile_b=tile,
+                                    inverse=inverse, interpret=interpret,
+                                    radices=radices)
+    if out_re.shape[0] != b:
+        out_re, out_im = out_re[:b], out_im[:b]
+    return (out_re + 1j * out_im).reshape(*lead, t, n)
 
 
 def _row_tile(r: int, c: int, elem_bytes: int = 4, buffers: int = 10) -> int:

@@ -13,10 +13,17 @@ def harmonic_sum_kernel(power: jax.Array, n_harmonics: int = 32, *,
     """(..., N) power spectra -> (..., LEVELS, N) harmonic-sum ladder."""
     if interpret is None:
         interpret = use_interpret()
-    assert n_harmonics & (n_harmonics - 1) == 0, "H must be a power of two"
+    # A ValueError, not an assert: asserts vanish under ``python -O`` and
+    # this guards caller input, not an internal invariant.
+    if n_harmonics < 1 or n_harmonics & (n_harmonics - 1):
+        raise ValueError(
+            f"n_harmonics must be a power of two, got {n_harmonics}")
     power = jnp.asarray(power, jnp.float32)
     lead = power.shape[:-1]
     n = power.shape[-1]
+    if n == 0:
+        raise ValueError("harmonic_sum_kernel needs a non-empty trailing "
+                         f"axis, got shape {power.shape}")
     b = 1
     for d in lead:
         b *= d

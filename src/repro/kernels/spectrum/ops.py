@@ -17,6 +17,9 @@ def power_spectrum_stats_kernel(x: jax.Array, *,
     if not jnp.issubdtype(x.dtype, jnp.complexfloating):
         x = x.astype(jnp.complex64)
     lead, n = x.shape[:-1], x.shape[-1]
+    if n == 0:
+        raise ValueError("power_spectrum_stats_kernel needs a non-empty "
+                         f"trailing axis, got shape {x.shape}")
     b = 1
     for d in lead:
         b *= d

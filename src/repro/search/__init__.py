@@ -1,0 +1,22 @@
+"""Fourier-Domain Acceleration Search (FDAS) on the FFT substrate.
+
+  templates  acceleration responses + TemplateBank (host-side, cached)
+  fdas       matched-filter plane, power, candidate extraction, and the
+             end-to-end fdas_search() pipeline
+
+The search workload of White, Adámek & Armour (2022): the FFT-heavy,
+DVFS-schedulable stage downstream of the paper's Sec. 5.3 pipeline.
+"""
+from repro.search.fdas import (Candidates, FDASResult, extract_candidates,
+                               fdas_conv_plan, fdas_search,
+                               matched_filter_plane, power_plane,
+                               serving_candidates)
+from repro.search.templates import (TemplateBank, acceleration_response,
+                                    matched_filter_taps)
+
+__all__ = [
+    "Candidates", "FDASResult", "TemplateBank", "acceleration_response",
+    "extract_candidates", "fdas_conv_plan", "fdas_search",
+    "matched_filter_plane", "matched_filter_taps", "power_plane",
+    "serving_candidates",
+]

@@ -10,12 +10,12 @@
 from repro.serving.batcher import Batch, coalesce
 from repro.serving.cache import CacheEntry, CacheStats, PlanSweepCache
 from repro.serving.dispatch import Dispatcher
-from repro.serving.request import (KIND_FFT, KIND_PULSAR, FFTRequest,
-                                   RequestReceipt, ShapeKey)
+from repro.serving.request import (KIND_FDAS, KIND_FFT, KIND_PULSAR,
+                                   FFTRequest, RequestReceipt, ShapeKey)
 from repro.serving.service import FFTService, ServiceReport
 
 __all__ = [
     "Batch", "CacheEntry", "CacheStats", "Dispatcher", "FFTRequest",
-    "FFTService", "KIND_FFT", "KIND_PULSAR", "PlanSweepCache",
+    "FFTService", "KIND_FDAS", "KIND_FFT", "KIND_PULSAR", "PlanSweepCache",
     "RequestReceipt", "ServiceReport", "ShapeKey", "coalesce",
 ]

@@ -28,7 +28,7 @@ from repro.core.perf_model import WorkloadProfile
 from repro.core.power_model import PowerModel
 from repro.core.workloads import COMPLEX_BYTES, FFTCase, fft_workload
 from repro.fft.plan import FFTPlan, plan_for_length
-from repro.serving.request import KIND_PULSAR, ShapeKey
+from repro.serving.request import KIND_FDAS, KIND_PULSAR, ShapeKey
 
 
 @dataclasses.dataclass
@@ -108,6 +108,8 @@ class PlanSweepCache:
     def _build(self, key: ShapeKey) -> CacheEntry:
         if key.kind == KIND_PULSAR:
             plan, fn, profile, n_fft = self._build_pulsar(key)
+        elif key.kind == KIND_FDAS:
+            plan, fn, profile, n_fft = self._build_fdas(key)
         else:
             plan, fn, profile, n_fft = self._build_fft(key)
         self.stats.sweeps += 1
@@ -147,3 +149,35 @@ class PlanSweepCache:
         profile = total_profile(shape, self.device)
         fn = functools.partial(pulsar_pipeline, n_harmonics=key.n_harmonics)
         return None, fn, profile, n_fft
+
+    def _build_fdas(self, key: ShapeKey):
+        """Acceleration-search entries: one template bank, one overlap-save
+        plan and one sweep per (n, segment, templates) key.
+
+        The bank and its cached filter spectra are shared process-wide
+        (``repro.search.templates`` / ``repro.fft.convolve`` caches); the
+        entry pins the jitted search closure and the merged stage profile
+        the sweep prices.
+        """
+        from repro.core.workloads import ConvCase, fdas_total_profile
+        from repro.search.fdas import fdas_search, serving_candidates
+        from repro.search.templates import TemplateBank
+        self.stats.plan_builds += 1
+        n = key.n
+        bank = TemplateBank.linear(zmax=max((key.templates - 1) / 2.0, 0.0),
+                                   n_templates=key.templates)
+        case = ConvCase(n=n // 2 + 1, templates=key.templates,
+                        taps=bank.taps, nfft=key.segment,
+                        precision=key.precision,
+                        batch_bytes=self.batch_bytes)
+        profile = fdas_total_profile(case, self.device, series_n=n)
+        nfft = key.segment or None
+
+        def fn(x, _bank=bank, _nfft=nfft):
+            return serving_candidates(fdas_search(x, _bank, nfft=_nfft))
+
+        # Per-transform receipts divide by the row count the swept profile
+        # actually models: ConvCase.n_rows (real half-spectrum rows), NOT
+        # the complex-bytes Eq. 6 cap — keeps FDAS receipts consistent
+        # with plain r2c ones at the same series length.
+        return case.plan, fn, profile, case.n_rows

@@ -18,6 +18,7 @@ _REQUEST_IDS = itertools.count()
 #: Request kinds the service understands.
 KIND_FFT = "fft"            # batched 1-D C2C transform (the paper's workload)
 KIND_PULSAR = "pulsar"      # full Sec. 5.3 pulsar-search pipeline
+KIND_FDAS = "fdas"          # Fourier-domain acceleration search (repro.search)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +43,8 @@ class ShapeKey:
     device: str = ""
     transform: str = "c2c"          # "c2c" | "r2c" — distinct plans + sweeps
     shape: tuple[int, ...] = ()     # N-D transform-axes lengths; () for 1-D
+    templates: int = 0              # fdas requests: acceleration-bank size
+    segment: int = 0                # fdas: overlap-save nfft (0 = auto)
 
     @property
     def last_axis(self) -> int:
@@ -82,6 +85,8 @@ class FFTRequest:
     n_harmonics: int = 32                # pulsar kind only
     transform: str = "c2c"               # "c2c" or "r2c" (real payloads)
     ndim: int = 1                        # transform rank (2 for fft2 jobs)
+    templates: int = 16                  # fdas kind only: bank size
+    segment: int = 0                     # fdas kind only: nfft (0 = auto)
     request_id: int = dataclasses.field(
         default_factory=lambda: next(_REQUEST_IDS))
     t_enqueue: float = 0.0               # stamped by the service
@@ -91,8 +96,11 @@ class FFTRequest:
             raise ValueError(
                 f"unknown precision {self.precision!r}; "
                 f"have {sorted(COMPLEX_BYTES)}")
-        if self.kind not in (KIND_FFT, KIND_PULSAR):
+        if self.kind not in (KIND_FFT, KIND_PULSAR, KIND_FDAS):
             raise ValueError(f"unknown request kind {self.kind!r}")
+        if self.kind == KIND_FDAS and self.templates < 1:
+            raise ValueError(
+                f"fdas requests need templates >= 1, got {self.templates}")
         if self.transform not in ("c2c", "r2c"):
             raise ValueError(f"unknown transform {self.transform!r}; "
                              "have ('c2c', 'r2c')")
@@ -140,11 +148,16 @@ class FFTRequest:
         return self.batch * self.n * self.shape_key("").elem_bytes
 
     def shape_key(self, device_name: str) -> ShapeKey:
+        """FDAS keys carry (n, segment, templates): distinct banks or
+        segment lengths compile distinct plans and sweep separately."""
+        fdas = self.kind == KIND_FDAS
         return ShapeKey(
             kind=self.kind, n=self.n, precision=self.precision,
             n_harmonics=self.n_harmonics if self.kind == KIND_PULSAR else 0,
             device=device_name, transform=self.transform,
-            shape=self.shape if self.ndim > 1 else ())
+            shape=self.shape if self.ndim > 1 else (),
+            templates=self.templates if fdas else 0,
+            segment=self.segment if fdas else 0)
 
 
 @dataclasses.dataclass

@@ -155,6 +155,8 @@ class FFTService:
         n_harmonics: int = 32,
         transform: str = "c2c",
         ndim: int = 1,
+        templates: int = 16,
+        segment: int = 0,
     ) -> FFTRequest:
         """Enqueue one request (a (batch, *shape) or (*shape,) array).
 
@@ -162,14 +164,18 @@ class FFTService:
         half the energy per transform at the same length (Eq. 5/6).
         ``ndim=2`` serves 2-D transforms (e.g. imaging grids) through the
         N-D plan graph — one fused kernel pass per pow2 axis — with their
-        own first-class plan + sweep cache entries.  The request's receipt
+        own first-class plan + sweep cache entries.  ``kind="fdas"`` runs
+        the full acceleration search (repro.search) on real time series;
+        ``templates`` sizes the bank and ``segment`` pins the
+        overlap-save FFT length (0 = cost-model auto-selection), and both
+        are part of the plan/sweep cache key.  The request's receipt
         becomes available after the next drain():
         ``service.receipt(request)``.
         """
         req = FFTRequest(x=jnp.asarray(x), precision=precision, kind=kind,
                          latency_budget=latency_budget,
                          n_harmonics=n_harmonics, transform=transform,
-                         ndim=ndim)
+                         ndim=ndim, templates=templates, segment=segment)
         req.t_enqueue = self._timer()
         self._pending.append(req)
         return req
@@ -232,7 +238,7 @@ class FFTService:
             if batch.key.transform == "r2c":
                 return x.real.astype(_REAL_EXEC_DTYPE[batch.key.precision])
             return x.astype(_EXEC_DTYPE[batch.key.precision])
-        # The pulsar pipeline consumes real time series.
+        # The pulsar pipeline and the FDAS search consume real time series.
         return x.real.astype(jnp.float32)
 
     def _effective_budget(self, batch: Batch) -> float | None:

@@ -179,3 +179,24 @@ class TestKernelPipelineEquivalence:
         np.testing.assert_allclose(p_k, p_j, rtol=2e-4, atol=2e-4)
         np.testing.assert_allclose(hs_k, harmonic_sum_ref(p_j, 8),
                                    rtol=2e-4, atol=2e-4)
+
+
+class TestKernelInputValidation:
+    """Caller-input guards must survive ``python -O`` (ValueError, not
+    assert) and reject empty trailing dims before they reach a kernel."""
+
+    def test_harmonic_sum_rejects_non_pow2_harmonics(self):
+        p = jnp.ones((2, 64))
+        with pytest.raises(ValueError, match="power of two"):
+            harmonic_sum_kernel(p, 12, interpret=True)
+        with pytest.raises(ValueError, match="power of two"):
+            harmonic_sum_kernel(p, 0, interpret=True)
+
+    def test_harmonic_sum_rejects_empty_trailing_dim(self):
+        with pytest.raises(ValueError, match="non-empty trailing"):
+            harmonic_sum_kernel(jnp.ones((2, 0)), 8, interpret=True)
+
+    def test_spectrum_stats_rejects_empty_trailing_dim(self):
+        with pytest.raises(ValueError, match="non-empty trailing"):
+            power_spectrum_stats_kernel(jnp.ones((2, 0), jnp.complex64),
+                                        interpret=True)
