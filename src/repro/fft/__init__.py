@@ -18,10 +18,11 @@ from repro.fft.convolve import (ConvPlan, conv_plan, overlap_save_conv,
                                 select_nfft)
 from repro.fft.multidim import fft2, fftn, rfft2, rfftn
 from repro.fft.stockham import fft, ifft, irfft, rfft
-from repro.fft.plan import fft_mul, plan_for_length, pow2_fft, FFTPlan
+from repro.fft.plan import (fft_mul, plan_for_length, plan_with_config,
+                            pow2_fft, FFTPlan)
 from repro.fft.plan_nd import NDPlan, plan_nd
 
 __all__ = ["fft", "ifft", "rfft", "irfft", "fft2", "rfft2", "fftn",
-           "rfftn", "bluestein_fft", "plan_for_length", "pow2_fft",
-           "fft_mul", "FFTPlan", "NDPlan", "plan_nd", "ConvPlan",
-           "conv_plan", "overlap_save_conv", "select_nfft"]
+           "rfftn", "bluestein_fft", "plan_for_length", "plan_with_config",
+           "pow2_fft", "fft_mul", "FFTPlan", "NDPlan", "plan_nd",
+           "ConvPlan", "conv_plan", "overlap_save_conv", "select_nfft"]

@@ -50,9 +50,15 @@ def _chirp_factors(n: int, inverse: bool
     return chirp, np.fft.fft(b)
 
 
-@functools.partial(jax.jit, static_argnames=("inverse",))
-def bluestein_fft(x: jax.Array, *, inverse: bool = False) -> jax.Array:
-    """C2C DFT of arbitrary length along the last axis via chirp-z."""
+@functools.partial(jax.jit, static_argnames=("inverse", "config"))
+def bluestein_fft(x: jax.Array, *, inverse: bool = False,
+                  config=None) -> jax.Array:
+    """C2C DFT of arbitrary length along the last axis via chirp-z.
+
+    ``config`` (a hashable :class:`repro.tune.KernelConfig`, static) rides
+    into the two inner pow2 FFTs so tuned tiles/radices actually execute
+    for Bluestein lengths too.
+    """
     from repro.fft.plan import pow2_fft          # lazy: avoids import cycle
 
     x = jnp.asarray(x)
@@ -65,8 +71,8 @@ def bluestein_fft(x: jax.Array, *, inverse: bool = False) -> jax.Array:
     fb = jnp.asarray(fb_np).astype(x.dtype)
 
     a = jnp.zeros((*x.shape[:-1], m), dtype=x.dtype).at[..., :n].set(x * chirp)
-    fa = pow2_fft(a)
-    conv = pow2_fft(fa * fb, inverse=True)
+    fa = pow2_fft(a, config=config)
+    conv = pow2_fft(fa * fb, inverse=True, config=config)
     out = conv[..., :n] * chirp
     if inverse:
         out = out / n

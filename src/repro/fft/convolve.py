@@ -144,15 +144,29 @@ class ConvPlan:
             self.forward_passes / self.templates)
 
 
-@functools.lru_cache(maxsize=None)
 def conv_plan(n: int, taps: int, templates: int = 1, nfft: int = 0,
               radices: tuple[int, ...] = DEFAULT_RADICES) -> ConvPlan:
     """Build (or return the memoised) overlap-save plan.
 
-    ``nfft=0`` auto-selects the segment length from the cost model.  An
-    explicit ``nfft`` must be a power of two no shorter than the filter —
-    a filter longer than its segment has no valid output points.
+    ``nfft=0`` defers the segment length to the active tuning context
+    (``repro.tune``: key ``(device, (n, taps, templates), "conv")``) and
+    falls back to the :func:`select_nfft` cost model when the key is
+    untuned or tuning is disabled.  An explicit ``nfft`` must be a power
+    of two no shorter than the filter — a filter longer than its segment
+    has no valid output points.
     """
+    if nfft == 0:
+        from repro.tune.context import plan_config
+        cfg = plan_config((n, taps, templates), "conv")
+        if (cfg is not None and cfg.segment and is_pow2(cfg.segment)
+                and cfg.segment >= taps):
+            nfft = cfg.segment
+    return _conv_plan(n, taps, templates, nfft, radices)
+
+
+@functools.lru_cache(maxsize=None)
+def _conv_plan(n: int, taps: int, templates: int = 1, nfft: int = 0,
+               radices: tuple[int, ...] = DEFAULT_RADICES) -> ConvPlan:
     from repro.fft.plan import (MAX_KERNEL_N,    # lazy: avoids import cycle
                                 plan_for_length)
 

@@ -20,6 +20,13 @@ lowering error, or ``REPRO_FFT_DISABLE_PALLAS=1``).  Tests monkeypatch
 the module-level ``_kernel_fft``/``_kernel_rfft``/``_kernel_irfft`` hooks
 to count kernel invocations or force the fallback.
 
+**Tuning**: plan construction consults the active
+:class:`repro.tune.TuningContext` (exactly once per (device, shape, kind)
+— the context memoises) for a tuned :class:`repro.tune.KernelConfig`
+overriding the batch-tile / radix-schedule / four-step-split heuristics;
+``REPRO_FFT_DISABLE_TUNING=1`` or the absence of a context restores the
+heuristic plans bit-for-bit (they are the same memoised objects).
+
 ``plan.passes`` feeds the DVFS workload model (HBM traffic = 2 bytes moved
 per pass), keeping the analytic model and the implementation consistent.
 All twiddle/chirp constants are memoised per length (here, in
@@ -43,6 +50,8 @@ from repro.fft.bluestein import bluestein_fft
 from repro.fft.radix import DEFAULT_RADICES, radix_schedule, stage_count
 from repro.fft.stockham import (_as_complex, _irfft_merge, _pack_real,
                                 _rfft_split, _stockham_pow2, _unpack_real)
+from repro.tune.config import KernelConfig
+from repro.tune.context import plan_config as _tuned_plan_config
 
 # Longest transform a single fused pass keeps resident (complex64 in VMEM;
 # 2^13 c64 = 64 KiB per transform — matches the paper's single-kernel range).
@@ -79,23 +88,51 @@ def _pallas_enabled() -> bool:
     return os.environ.get("REPRO_FFT_DISABLE_PALLAS", "") not in ("1", "true")
 
 
-def pow2_fft(x: jax.Array, *, inverse: bool = False) -> jax.Array:
+def _kernel_overrides(config: KernelConfig | None) -> dict:
+    """Kwargs a tuned config contributes to a kernel entry-point call.
+
+    None (heuristic) contributes nothing, so the disabled/untuned path
+    issues byte-identical kernel calls to the pre-tuner code.
+    """
+    if config is None:
+        return {}
+    kw = {}
+    if config.tile_b:
+        kw["tile_b"] = config.tile_b
+    if config.radices:
+        kw["radices"] = config.radices
+    return kw
+
+
+def _resolve_split(n: int, config: KernelConfig | None) -> tuple[int, int]:
+    """The four-step (n1, n2) cut: the tuned one when valid, else balanced."""
+    if config is not None and config.split:
+        n1, n2 = config.split
+        if n1 * n2 == n and _is_pow2(n1) and _is_pow2(n2):
+            return n1, n2
+    return _four_step_split(n)
+
+
+def pow2_fft(x: jax.Array, *, inverse: bool = False,
+             config: KernelConfig | None = None) -> jax.Array:
     """C2C FFT of a pow2 length, routed through the Pallas kernel.
 
     Single-kernel lengths run the fused mixed-radix kernel (pure-JAX
     Stockham on fallback); longer lengths recurse through the four-step
     decomposition so *every* pow2 pass of every plan lands on the kernel.
+    ``config`` (a tuned :class:`repro.tune.KernelConfig`) overrides the
+    batch tile / radix schedule / four-step split heuristics.
     """
     n = x.shape[-1]
     if n > MAX_SINGLE_PASS:
         if inverse:
-            return jnp.conj(pow2_fft(jnp.conj(x))) / n
-        n1, n2 = _four_step_split(n)
-        return four_step_fft(x, n1, n2)
+            return jnp.conj(pow2_fft(jnp.conj(x), config=config)) / n
+        n1, n2 = _resolve_split(n, config)
+        return four_step_fft(x, n1, n2, config=config)
     kern = _kernel_fft
     if kern is not None and n <= MAX_KERNEL_N and _pallas_enabled():
         try:
-            return kern(x, inverse=inverse)
+            return kern(x, inverse=inverse, **_kernel_overrides(config))
         except Exception:                             # graceful fallback
             pass
     return _stockham_pow2(x, inverse=inverse)
@@ -105,7 +142,8 @@ def _is_pow2(n: int) -> bool:
     return n > 0 and (n & (n - 1)) == 0
 
 
-def fft_mul(x: jax.Array, bank) -> jax.Array:
+def fft_mul(x: jax.Array, bank,
+            config: KernelConfig | None = None) -> jax.Array:
     """Forward pow2 C2C FFT fused with a (T, N) filter-bank multiply.
 
     (..., N) in -> (..., T, N) out: out[..., t, :] = FFT(x) * bank[t].
@@ -122,10 +160,10 @@ def fft_mul(x: jax.Array, bank) -> jax.Array:
     if (kern is not None and _is_pow2(n) and 1 < n <= MAX_KERNEL_N
             and _pallas_enabled()):
         try:
-            return kern(x, bank)
+            return kern(x, bank, **_kernel_overrides(config))
         except Exception:                             # graceful fallback
             pass
-    y = pow2_fft(x)
+    y = pow2_fft(x, config=config)
     return y[..., None, :] * jnp.asarray(bank).astype(y.dtype)
 
 
@@ -133,8 +171,8 @@ def fft_mul(x: jax.Array, bank) -> jax.Array:
 # Fused-epilogue pass primitives (the plan graph's node executors)
 # ---------------------------------------------------------------------------
 
-def fft_transposed(x: jax.Array, *, twiddle=None,
-                   inverse: bool = False) -> jax.Array:
+def fft_transposed(x: jax.Array, *, twiddle=None, inverse: bool = False,
+                   config: KernelConfig | None = None) -> jax.Array:
     """C2C FFT along the last axis with the last two axes swapped on write.
 
     One fused kernel pass: (..., R, C) -> (..., C, R).  ``twiddle`` (an
@@ -149,28 +187,30 @@ def fft_transposed(x: jax.Array, *, twiddle=None,
     if (kern is not None and _is_pow2(n) and n <= MAX_KERNEL_N
             and n > 1 and _pallas_enabled()):
         try:
-            return kern(x, twiddle=twiddle, inverse=inverse)
+            return kern(x, twiddle=twiddle, inverse=inverse,
+                        **_kernel_overrides(config))
         except Exception:                             # graceful fallback
             pass
-    y = _routed_1d(x, n, inverse)
+    y = _routed_1d(x, n, inverse, config)
     if twiddle is not None:
         y = y * jnp.asarray(twiddle).astype(y.dtype)
     return jnp.swapaxes(y, -1, -2)
 
 
-def _routed_1d(x: jax.Array, n: int, inverse: bool) -> jax.Array:
+def _routed_1d(x: jax.Array, n: int, inverse: bool,
+               config: KernelConfig | None = None) -> jax.Array:
     """Last-axis C2C of any length, honouring ``inverse`` (conj trick for
     the non-pow2 plans, which only run forward)."""
     if _is_pow2(n):
-        return pow2_fft(x, inverse=inverse)
+        return pow2_fft(x, inverse=inverse, config=config)
     plan = plan_for_length(n)
     if inverse:
         return jnp.conj(plan(jnp.conj(x))) / n
     return plan(x)
 
 
-def fft_column(x: jax.Array, *, twiddle=None,
-               inverse: bool = False) -> jax.Array:
+def fft_column(x: jax.Array, *, twiddle=None, inverse: bool = False,
+               config: KernelConfig | None = None) -> jax.Array:
     """C2C FFT over axis -2, layout preserved: (..., R, C) -> (..., R, C).
 
     One fused kernel pass (transpose-read + FFT + optional twiddle
@@ -185,16 +225,18 @@ def fft_column(x: jax.Array, *, twiddle=None,
     if (kern is not None and _is_pow2(r) and 1 < r <= MAX_KERNEL_N
             and _pallas_enabled()):
         try:
-            return kern(x, twiddle=twiddle, inverse=inverse)
+            return kern(x, twiddle=twiddle, inverse=inverse,
+                        **_kernel_overrides(config))
         except Exception:                             # graceful fallback
             pass
-    y = _routed_1d(jnp.swapaxes(x, -1, -2), r, inverse)
+    y = _routed_1d(jnp.swapaxes(x, -1, -2), r, inverse, config)
     if twiddle is not None:
         y = y * jnp.asarray(twiddle).astype(y.dtype)
     return jnp.swapaxes(y, -1, -2)
 
 
-def rfft_transposed(x: jax.Array) -> jax.Array:
+def rfft_transposed(x: jax.Array,
+                    config: KernelConfig | None = None) -> jax.Array:
     """R2C FFT along the last axis, transposed write: (..., R, C) real ->
     (..., C/2+1, R) — one fused pass (pack + half-length FFT + Hermitian
     split + transpose all in VMEM)."""
@@ -206,10 +248,10 @@ def rfft_transposed(x: jax.Array) -> jax.Array:
     if (kern is not None and _is_pow2(n) and 4 <= n
             and n // 2 <= MAX_KERNEL_N and _pallas_enabled()):
         try:
-            return kern(x)
+            return kern(x, **_kernel_overrides(config))
         except Exception:
             pass
-    return jnp.swapaxes(plan_for_length(n, "r2c")(x), -1, -2)
+    return jnp.swapaxes(plan_with_config(n, "r2c", config)(x), -1, -2)
 
 
 def tiled_transpose(x: jax.Array) -> jax.Array:
@@ -255,7 +297,8 @@ def _four_step_twiddle(n1: int, n2: int) -> np.ndarray:
     return np.exp(-2j * np.pi * (j * k) / (n1 * n2))
 
 
-def four_step_fft(x: jax.Array, n1: int, n2: int) -> jax.Array:
+def four_step_fft(x: jax.Array, n1: int, n2: int,
+                  config: KernelConfig | None = None) -> jax.Array:
     """Long FFT as (n1 x n2) decomposition — Bailey's four-step algorithm,
     run as TWO fused kernel passes.
 
@@ -281,8 +324,8 @@ def four_step_fft(x: jax.Array, n1: int, n2: int) -> jax.Array:
     batch = x.shape[:-1]
     v = x.reshape(*batch, n1, n2)
     tw = _four_step_twiddle(n1, n2)              # (n2, n1): w^{j2*k1}
-    v = fft_column(v, twiddle=tw)                # (..., n1, n2): T[k1, j2]
-    v = fft_transposed(v)                        # (..., n2, n1), natural
+    v = fft_column(v, twiddle=tw, config=config)  # (..., n1, n2): T[k1, j2]
+    v = fft_transposed(v, config=config)         # (..., n2, n1), natural
     return v.reshape(*batch, n)
 
 
@@ -290,11 +333,13 @@ def four_step_fft(x: jax.Array, n1: int, n2: int) -> jax.Array:
 # Plan construction
 # ---------------------------------------------------------------------------
 
-def _c2c_fn(x: jax.Array) -> jax.Array:
-    return pow2_fft(_as_complex(x))
+def _c2c_fn(x: jax.Array,
+            config: KernelConfig | None = None) -> jax.Array:
+    return pow2_fft(_as_complex(x), config=config)
 
 
-def _r2c_fn(x: jax.Array, n: int) -> jax.Array:
+def _r2c_fn(x: jax.Array, n: int,
+            config: KernelConfig | None = None) -> jax.Array:
     """Routed R2C: fused kernel when the packed length fits, else pack ->
     routed pow2 C2C -> split (so long real transforms still hit the kernel
     once per four-step pass)."""
@@ -306,15 +351,17 @@ def _r2c_fn(x: jax.Array, n: int) -> jax.Array:
     if (kern is not None and 4 <= n and m <= MAX_KERNEL_N
             and _pallas_enabled()):
         try:
-            return kern(x)
+            return kern(x, **_kernel_overrides(config))
         except Exception:
             pass
     if m < 1:
         return _as_complex(x)
-    return _rfft_split(pow2_fft(_pack_real(x.astype(jnp.float32))), n)
+    return _rfft_split(
+        pow2_fft(_pack_real(x.astype(jnp.float32)), config=config), n)
 
 
-def _c2r_fn(x: jax.Array, n: int) -> jax.Array:
+def _c2r_fn(x: jax.Array, n: int,
+            config: KernelConfig | None = None) -> jax.Array:
     """Routed C2R inverse of :func:`_r2c_fn` (1/N normalised)."""
     x = _as_complex(x)
     m = n // 2
@@ -322,65 +369,95 @@ def _c2r_fn(x: jax.Array, n: int) -> jax.Array:
     if (kern is not None and 4 <= n and m <= MAX_KERNEL_N
             and _pallas_enabled()):
         try:
-            return kern(x)
+            return kern(x, **_kernel_overrides(config))
         except Exception:
             pass
-    return _unpack_real(pow2_fft(_irfft_merge(x, n), inverse=True))
+    return _unpack_real(
+        pow2_fft(_irfft_merge(x, n), inverse=True, config=config))
 
 
-@functools.lru_cache(maxsize=None)
 def plan_for_length(n: int, kind: str = "c2c") -> FFTPlan:
     """Build (or return the memoised) plan for length ``n``.
 
     ``kind`` selects the transform: ``"c2c"`` (default), ``"r2c"`` (real
     input, N/2+1 bins out) or ``"c2r"`` (the inverse).  Plans are immutable
-    and shape-keyed, so planning runs once per (length, kind) per process —
-    the serving layer's plan cache builds on this, and repeated pipeline
-    construction never re-derives the decomposition or its twiddles.
+    and shape-keyed, so planning runs once per (length, kind, config) per
+    process — the serving layer's plan cache builds on this, and repeated
+    pipeline construction never re-derives the decomposition or twiddles.
+
+    The active :class:`repro.tune.TuningContext` (if any) supplies the
+    tuned kernel config; it memoises its own lookups, so the tuning cache
+    is consulted exactly once per (device, shape, kind) no matter how
+    often plans rebuild.  ``REPRO_FFT_DISABLE_TUNING=1`` (or no context)
+    resolves to ``None`` — the pre-tuner heuristic plan object itself.
     """
+    return _plan_for_length(int(n), kind, _tuned_plan_config((n,), kind))
+
+
+def plan_with_config(n: int, kind: str = "c2c",
+                     config: KernelConfig | None = None) -> FFTPlan:
+    """Build the plan for an *explicit* config, bypassing the active
+    tuning context (the autotuner's measurement loop, plan_nd threading).
+    A heuristic-equivalent config collapses onto the heuristic plan."""
+    if config is not None and config.is_heuristic:
+        config = None
+    return _plan_for_length(int(n), kind, config)
+
+
+@functools.lru_cache(maxsize=None)
+def _plan_for_length(n: int, kind: str,
+                     config: KernelConfig | None) -> FFTPlan:
     if kind not in ("c2c", "r2c", "c2r"):
         raise ValueError(f"unknown transform kind {kind!r}")
+    radices = (config.radices if config is not None and config.radices
+               else DEFAULT_RADICES)
     if kind != "c2c":
-        return _real_plan(n, kind)
+        return _real_plan(n, kind, config)
     if _is_pow2(n):
-        schedule = radix_schedule(min(n, MAX_SINGLE_PASS))
+        schedule = radix_schedule(min(n, MAX_SINGLE_PASS), radices)
         if n <= MAX_SINGLE_PASS:
-            return FFTPlan(n, "stockham", 1, _c2c_fn,
+            return FFTPlan(n, "stockham", 1,
+                           functools.partial(_c2c_fn, config=config),
                            stages=len(schedule), radices=schedule)
-        n1, n2 = _four_step_split(n)
+        n1, n2 = _resolve_split(n, config)
         return FFTPlan(
             n, "four-step", 2,
-            lambda x, n1=n1, n2=n2: four_step_fft(_as_complex(x), n1, n2),
-            stages=stage_count(n1) + stage_count(n2),
-            radices=radix_schedule(n1),
+            lambda x, n1=n1, n2=n2, c=config: four_step_fft(
+                _as_complex(x), n1, n2, config=c),
+            stages=stage_count(n1, radices) + stage_count(n2, radices),
+            radices=radix_schedule(n1, radices),
         )
     # Bluestein: the filter-spectrum FFT is precomputed and cached per
     # length (repro.fft.bluestein), so only 2 pow2 FFTs of length
-    # m >= 2n-1 run per call, plus pointwise chirp passes.
+    # m >= 2n-1 run per call, plus pointwise chirp passes.  The config
+    # rides into those inner FFTs (the heuristic path keeps the bare
+    # bluestein_fft object so disabled tuning stays bit-for-bit).
     m = 1 << (2 * n - 2).bit_length()
-    inner = plan_for_length(m)
-    return FFTPlan(n, "bluestein", 2 * inner.passes + 1, bluestein_fft,
+    inner = _plan_for_length(m, "c2c", config)
+    fn = (bluestein_fft if config is None
+          else functools.partial(bluestein_fft, config=config))
+    return FFTPlan(n, "bluestein", 2 * inner.passes + 1, fn,
                    stages=inner.stages, radices=inner.radices)
 
 
-def _real_plan(n: int, kind: str) -> FFTPlan:
+def _real_plan(n: int, kind: str, config: KernelConfig | None) -> FFTPlan:
     if not _is_pow2(n):
         if kind == "c2r":
             raise ValueError(
                 f"c2r plans need a power-of-two length, got {n}")
         # r2c fallback: full C2C plan + slice to the half spectrum.
-        inner = plan_for_length(n)
+        inner = _plan_for_length(n, "c2c", config)
         return FFTPlan(
             n, inner.algorithm, inner.passes,
             lambda x: inner.fn(_as_complex(x))[..., :n // 2 + 1],
             kind="r2c", stages=inner.stages, radices=inner.radices)
     m = max(n // 2, 1)
-    inner = plan_for_length(m) if m > 1 else None
+    inner = _plan_for_length(m, "c2c", config) if m > 1 else None
     passes = inner.passes if inner else 1
     stages = inner.stages if inner else 0
     radices = inner.radices if inner else ()
     alg = inner.algorithm if inner else "stockham"
-    fn = (functools.partial(_r2c_fn, n=n) if kind == "r2c"
-          else functools.partial(_c2r_fn, n=n))
+    fn = (functools.partial(_r2c_fn, n=n, config=config) if kind == "r2c"
+          else functools.partial(_c2r_fn, n=n, config=config))
     return FFTPlan(n, alg, passes, fn, kind=kind, stages=stages,
                    radices=radices)

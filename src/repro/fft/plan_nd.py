@@ -38,8 +38,10 @@ from typing import Callable
 import jax
 
 from repro.fft.plan import (MAX_KERNEL_N, FFTPlan, _is_pow2,
-                            plan_for_length)
+                            plan_with_config)
 from repro.fft import plan as _plan_mod
+from repro.tune.config import KernelConfig
+from repro.tune.context import plan_config as _tuned_plan_config
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,7 +99,6 @@ def _axis_kind(kind: str, is_last_axis: bool) -> str:
     return "r2c" if (kind == "r2c" and is_last_axis) else "c2c"
 
 
-@functools.lru_cache(maxsize=None)
 def plan_nd(shape: tuple[int, ...], kind: str = "c2c") -> NDPlan:
     """Compile (and memoise) the plan graph for transform-axes ``shape``.
 
@@ -105,13 +106,24 @@ def plan_nd(shape: tuple[int, ...], kind: str = "c2c") -> NDPlan:
     numpy ``rfftn`` convention).  Transform axes must be the trailing axes
     of the operand, in order; :mod:`repro.fft.multidim` normalises
     arbitrary ``axes=`` arguments before calling in.
+
+    The active tuning context supplies a tuned kernel config for the
+    whole graph (one consult per distinct (shape, kind), memoised by the
+    context); the disabled/untuned path compiles the heuristic graph.
     """
+    shape = tuple(shape)
+    return _plan_nd(shape, kind, _tuned_plan_config(shape, kind))
+
+
+@functools.lru_cache(maxsize=None)
+def _plan_nd(shape: tuple[int, ...], kind: str,
+             config: KernelConfig | None = None) -> NDPlan:
     if kind not in ("c2c", "r2c"):
         raise ValueError(f"unknown N-D transform kind {kind!r}")
     if not shape or any(n < 1 for n in shape):
         raise ValueError(f"bad transform shape {shape!r}")
     if len(shape) == 1:
-        return _plan_1d(shape, kind)
+        return _plan_1d(shape, kind, config)
 
     nodes: list[PassNode] = []
     chain = 0
@@ -120,7 +132,7 @@ def plan_nd(shape: tuple[int, ...], kind: str = "c2c") -> NDPlan:
     for step, axis in enumerate(reversed(range(len(shape)))):
         na = shape[axis]
         akind = _axis_kind(kind, axis == len(shape) - 1)
-        plan1 = plan_for_length(na, akind) if na > 1 else None
+        plan1 = plan_with_config(na, akind, config) if na > 1 else None
         # What the per-axis moveaxis chain paid: the 1-D plan's passes,
         # plus a moveaxis there and back for every non-trailing axis.
         chain += (plan1.passes if plan1 else 1) + (0 if step == 0 else 2)
@@ -155,14 +167,15 @@ def plan_nd(shape: tuple[int, ...], kind: str = "c2c") -> NDPlan:
         stages=sum(nd.stages for nd in node_t),
         out_shape=out_shape,
         fn=functools.partial(_run_graph, shape=shape, kind=kind,
-                             nodes=node_t),
+                             nodes=node_t, config=config),
     )
 
 
-def _plan_1d(shape: tuple[int, ...], kind: str) -> NDPlan:
+def _plan_1d(shape: tuple[int, ...], kind: str,
+             config: KernelConfig | None = None) -> NDPlan:
     """Rank-1 spec: wrap the 1-D planner as a single-node graph."""
     (n,) = shape
-    plan1: FFTPlan = plan_for_length(n, kind)
+    plan1: FFTPlan = plan_with_config(n, kind, config)
     node = PassNode("fft1d", n=n, kind=kind, hbm_passes=plan1.passes,
                     algorithm=plan1.algorithm, stages=plan1.stages)
     out = (n // 2 + 1 if kind == "r2c" and n > 1 else n,)
@@ -172,7 +185,8 @@ def _plan_1d(shape: tuple[int, ...], kind: str) -> NDPlan:
 
 
 def _run_graph(x: jax.Array, *, shape: tuple[int, ...], kind: str,
-               nodes: tuple[PassNode, ...]) -> jax.Array:
+               nodes: tuple[PassNode, ...],
+               config: KernelConfig | None = None) -> jax.Array:
     """Execute a compiled node sequence on ``x`` (transform axes trailing).
 
     The node executors are the routed pass primitives in
@@ -192,13 +206,13 @@ def _run_graph(x: jax.Array, *, shape: tuple[int, ...], kind: str,
         r = math.prod(cur[:-1])
         c = cur[-1]
         if node.op == "fft_t":
-            y = _plan_mod.fft_transposed(x.reshape(b, r, c))
+            y = _plan_mod.fft_transposed(x.reshape(b, r, c), config=config)
             cur = [cur[-1]] + cur[:-1]
         elif node.op == "rfft_t":
-            y = _plan_mod.rfft_transposed(x.reshape(b, r, c))
+            y = _plan_mod.rfft_transposed(x.reshape(b, r, c), config)
             cur = [c // 2 + 1] + cur[:-1]
         elif node.op == "fft1d":
-            plan1 = plan_for_length(c, node.kind)
+            plan1 = plan_with_config(c, node.kind, config)
             y = plan1(x.reshape(b, r, c))
             cur = cur[:-1] + [y.shape[-1]]
             x = y

@@ -14,13 +14,23 @@ def round_up(x: int, m: int) -> int:
 
 
 def batch_tile(n: int, elem_bytes: int, *, vmem_budget: int = 8 * 2**20,
-               buffers: int = 4, lane: int = 8) -> int:
+               buffers: int = 4, lane: int = 8,
+               override: int | None = None) -> int:
     """Largest batch tile keeping ``buffers`` copies of (tile, n) in VMEM.
 
     VMEM on v5e is ~128 MiB but we budget a small slice so several kernels
     and double-buffered DMA windows coexist; ``lane`` aligns the sublane
     dimension.
+
+    ``override`` short-circuits the heuristic with an explicit tile (the
+    autotuner's tuned choice, ``repro.tune``) — validated positive but
+    otherwise trusted: the tuner measured it on this device.
     """
+    if override is not None:
+        if override < 1:
+            raise ValueError(f"batch tile override must be >= 1, "
+                             f"got {override}")
+        return override
     per_row = n * elem_bytes * buffers
     tile = max(vmem_budget // per_row, 1)
     if tile >= lane:

@@ -48,6 +48,23 @@ def _cmul(ar, ai, br, bi):
     return ar * br - ai * bi, ar * bi + ai * br
 
 
+def _require_pow2(n: int, what: str, minimum: int = 1) -> None:
+    """ValueError, not assert: asserts vanish under ``python -O`` and turn
+    malformed launches into silent corruption inside the kernel."""
+    if n < 1 or n & (n - 1):
+        raise ValueError(f"{what} must be a power of two, got {n}")
+    if n < minimum:
+        raise ValueError(f"{what} must be >= {minimum}, got {n}")
+
+
+def _require_tiled(size: int, tile: int, axis: str) -> None:
+    if tile < 1 or size % tile:
+        raise ValueError(
+            f"{axis}={size} is not a multiple of its tile ({tile}); the "
+            f"ops layer (repro.kernels.fft.ops) pads batches to tile "
+            f"multiples — route through it or pass a dividing tile")
+
+
 def _mixed_radix_stages(re, im, n: int, twr, twi, *,
                         radices: tuple[int, ...], inverse: bool):
     """Run the full radix schedule on a (B, N) re/im tile pair.
@@ -235,9 +252,11 @@ def fft_mul_pallas(re: jax.Array, im: jax.Array, fbr: jax.Array,
     """
     b, n = re.shape
     t = fbr.shape[0]
-    assert n & (n - 1) == 0, f"pow2 lengths only, got {n}"
-    assert b % tile_b == 0, (b, tile_b)
-    assert fbr.shape == (t, n), (fbr.shape, t, n)
+    _require_pow2(n, "FFT length")
+    _require_tiled(b, tile_b, "batch")
+    if fbr.shape != (t, n):
+        raise ValueError(
+            f"filter-bank planes must be (T, {n}), got {fbr.shape}")
     grid = (b // tile_b,)
     in_spec = pl.BlockSpec((tile_b, n), lambda i: (i, 0))
     fb_spec = pl.BlockSpec((t, n), lambda i: (0, 0))
@@ -343,8 +362,8 @@ def fft_pallas(re: jax.Array, im: jax.Array, *, tile_b: int = 8,
                radices: tuple[int, ...] = DEFAULT_RADICES):
     """Batched pow2 C2C FFT over the last axis; (B, N) re/im in, same out."""
     b, n = re.shape
-    assert n & (n - 1) == 0, f"pow2 lengths only, got {n}"
-    assert b % tile_b == 0, (b, tile_b)
+    _require_pow2(n, "FFT length")
+    _require_tiled(b, tile_b, "batch")
     if n == 1:
         return re, im
     grid = (b // tile_b,)
@@ -368,8 +387,8 @@ def rfft_pallas(x: jax.Array, *, tile_b: int = 8, interpret: bool = False,
                 radices: tuple[int, ...] = DEFAULT_RADICES):
     """Batched pow2 R2C FFT: (B, N) f32 in, (B, N/2+1) re/im out."""
     b, n = x.shape
-    assert n & (n - 1) == 0 and n >= 4, f"pow2 N >= 4 only, got {n}"
-    assert b % tile_b == 0, (b, tile_b)
+    _require_pow2(n, "packed R2C/C2R length", minimum=4)
+    _require_tiled(b, tile_b, "batch")
     m = n // 2
     grid = (b // tile_b,)
     in_spec = pl.BlockSpec((tile_b, n), lambda i: (i, 0))
@@ -401,8 +420,8 @@ def fft_t_pallas(re: jax.Array, im: jax.Array, *, tile_r: int = 8,
     2-D / four-step transform costs zero extra HBM passes.
     """
     b, r, c = re.shape
-    assert c & (c - 1) == 0, f"pow2 row lengths only, got {c}"
-    assert r % tile_r == 0, (r, tile_r)
+    _require_pow2(c, "row length C")
+    _require_tiled(r, tile_r, "rows R")
     grid = (b, r // tile_r)
     in_spec = pl.BlockSpec((1, tile_r, c), lambda i, j: (i, j, 0))
     out_spec = pl.BlockSpec((1, c, tile_r), lambda i, j: (i, 0, j))
@@ -434,9 +453,11 @@ def fft_t_twiddle_pallas(re: jax.Array, im: jax.Array, ftwr: jax.Array,
     its (tile_r, C) window and multiplies before the transposed write.
     """
     b, r, c = re.shape
-    assert c & (c - 1) == 0, f"pow2 row lengths only, got {c}"
-    assert r % tile_r == 0, (r, tile_r)
-    assert ftwr.shape == (r, c), (ftwr.shape, r, c)
+    _require_pow2(c, "row length C")
+    _require_tiled(r, tile_r, "rows R")
+    if ftwr.shape != (r, c):
+        raise ValueError(
+            f"twiddle planes must be ({r}, {c}), got {ftwr.shape}")
     grid = (b, r // tile_r)
     in_spec = pl.BlockSpec((1, tile_r, c), lambda i, j: (i, j, 0))
     ftw_spec = pl.BlockSpec((tile_r, c), lambda i, j: (j, 0))
@@ -469,8 +490,8 @@ def fft_axis1_pallas(re: jax.Array, im: jax.Array, *, tile_c: int = 8,
     the column pass of a 2-D / four-step transform in one HBM round trip.
     """
     b, r, c = re.shape
-    assert r & (r - 1) == 0, f"pow2 column lengths only, got {r}"
-    assert c % tile_c == 0, (c, tile_c)
+    _require_pow2(r, "column length R")
+    _require_tiled(c, tile_c, "columns C")
     grid = (b, c // tile_c)
     spec = pl.BlockSpec((1, r, tile_c), lambda i, j: (i, 0, j))
     twr, twi = packed_stage_twiddles(r, radices)
@@ -498,9 +519,11 @@ def fft_axis1_twiddle_pallas(re: jax.Array, im: jax.Array, ftwr: jax.Array,
     """:func:`fft_axis1_pallas` with a fused (C, R) twiddle epilogue:
     output element [.., k, j] is multiplied by ``ftw[j, k]`` in-kernel."""
     b, r, c = re.shape
-    assert r & (r - 1) == 0, f"pow2 column lengths only, got {r}"
-    assert c % tile_c == 0, (c, tile_c)
-    assert ftwr.shape == (c, r), (ftwr.shape, c, r)
+    _require_pow2(r, "column length R")
+    _require_tiled(c, tile_c, "columns C")
+    if ftwr.shape != (c, r):
+        raise ValueError(
+            f"twiddle planes must be ({c}, {r}), got {ftwr.shape}")
     grid = (b, c // tile_c)
     spec = pl.BlockSpec((1, r, tile_c), lambda i, j: (i, 0, j))
     ftw_spec = pl.BlockSpec((tile_c, r), lambda i, j: (j, 0))
@@ -525,8 +548,8 @@ def rfft_t_pallas(x: jax.Array, *, tile_r: int = 8, interpret: bool = False,
                   radices: tuple[int, ...] = DEFAULT_RADICES):
     """Fused R2C + transposed write: (B, R, C) f32 -> (B, C/2+1, R) re/im."""
     b, r, c = x.shape
-    assert c & (c - 1) == 0 and c >= 4, f"pow2 C >= 4 only, got {c}"
-    assert r % tile_r == 0, (r, tile_r)
+    _require_pow2(c, "R2C row length C", minimum=4)
+    _require_tiled(r, tile_r, "rows R")
     m = c // 2
     grid = (b, r // tile_r)
     in_spec = pl.BlockSpec((1, tile_r, c), lambda i, j: (i, j, 0))
@@ -561,7 +584,8 @@ def transpose_pallas(*planes: jax.Array, tile_r: int = 8, tile_c: int = 128,
     (non-pow2 axes whose FFT pass cannot fuse the hand-off).
     """
     b, r, c = planes[0].shape
-    assert r % tile_r == 0 and c % tile_c == 0, (r, c, tile_r, tile_c)
+    _require_tiled(r, tile_r, "rows R")
+    _require_tiled(c, tile_c, "columns C")
     grid = (b, r // tile_r, c // tile_c)
     in_spec = pl.BlockSpec((1, tile_r, tile_c), lambda i, j, k: (i, j, k))
     out_spec = pl.BlockSpec((1, tile_c, tile_r), lambda i, j, k: (i, k, j))
@@ -586,8 +610,8 @@ def irfft_pallas(re: jax.Array, im: jax.Array, *, tile_b: int = 8,
     b, m1 = re.shape
     m = m1 - 1
     n = 2 * m
-    assert n & (n - 1) == 0 and n >= 4, f"pow2 N >= 4 only, got {n}"
-    assert b % tile_b == 0, (b, tile_b)
+    _require_pow2(n, "packed R2C/C2R length", minimum=4)
+    _require_tiled(b, tile_b, "batch")
     grid = (b // tile_b,)
     in_spec = pl.BlockSpec((tile_b, m + 1), lambda i: (i, 0))
     out_spec = pl.BlockSpec((tile_b, n), lambda i: (i, 0))

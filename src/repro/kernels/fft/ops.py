@@ -36,13 +36,16 @@ def _flatten(x: jax.Array) -> tuple[jax.Array, tuple[int, ...], int]:
 
 
 def _tile_and_pad(planes: list[jax.Array], b: int, n: int,
-                  elem_bytes: int = 4) -> tuple[list[jax.Array], int]:
+                  elem_bytes: int = 4,
+                  tile_b: int | None = None) -> tuple[list[jax.Array], int]:
     """Pick a batch tile and pad only when the batch is not a multiple.
 
     A tile-multiple batch (the common case after the serving layer's
     coalescer) skips the pad-then-slice HBM round trip entirely.
+    ``tile_b`` is an explicit override (the autotuner's tuned choice,
+    clamped to the batch) — when None the VMEM-budget heuristic decides.
     """
-    tile = min(batch_tile(n, elem_bytes, buffers=8), b)
+    tile = min(batch_tile(n, elem_bytes, buffers=8, override=tile_b), b)
     pad = (-b) % tile
     if pad:
         planes = [jnp.pad(p, ((0, pad), (0, 0))) for p in planes]
@@ -51,12 +54,14 @@ def _tile_and_pad(planes: list[jax.Array], b: int, n: int,
 
 def fft_kernel_c2c(x: jax.Array, *, inverse: bool = False,
                    interpret: bool | None = None,
-                   radices: tuple[int, ...] = DEFAULT_RADICES) -> jax.Array:
+                   radices: tuple[int, ...] = DEFAULT_RADICES,
+                   tile_b: int | None = None) -> jax.Array:
     """Batched pow2 C2C FFT (..., N) via the Pallas kernel.
 
     Accepts complex input, splits to re/im planes for the kernel, and
     recombines.  Longer-than-VMEM transforms should go through
     ``repro.fft.plan`` (four-step built on this kernel per pass).
+    ``tile_b`` overrides the heuristic batch tile (autotuner hook).
     """
     if interpret is None:
         interpret = use_interpret()
@@ -66,11 +71,14 @@ def fft_kernel_c2c(x: jax.Array, *, inverse: bool = False,
     n = x.shape[-1]
     _check_kernel_length(n)
     if n == 1:
-        return x if not inverse else x / 1
+        # The length-1 DFT is the identity BOTH ways: the forward sum is
+        # the single point and the inverse normalisation is 1/1, so the
+        # old ``x / 1`` "inverse" was a silent no-op copy.
+        return x
     flat, lead, b = _flatten(x)
     re = flat.real.astype(jnp.float32)
     im = flat.imag.astype(jnp.float32)
-    (re, im), tile = _tile_and_pad([re, im], b, n)
+    (re, im), tile = _tile_and_pad([re, im], b, n, tile_b=tile_b)
     out_re, out_im = fft_pallas(re, im, tile_b=tile, inverse=inverse,
                                 interpret=interpret, radices=radices)
     if out_re.shape[0] != b:
@@ -80,8 +88,8 @@ def fft_kernel_c2c(x: jax.Array, *, inverse: bool = False,
 
 def fft_kernel_c2c_mul(x: jax.Array, bank, *, inverse: bool = False,
                        interpret: bool | None = None,
-                       radices: tuple[int, ...] = DEFAULT_RADICES
-                       ) -> jax.Array:
+                       radices: tuple[int, ...] = DEFAULT_RADICES,
+                       tile_b: int | None = None) -> jax.Array:
     """Fused pow2 C2C FFT + (T, N) filter-bank multiply epilogue.
 
     (..., N) in -> (..., T, N) out with out[..., t, :] = FFT(x) * bank[t].
@@ -110,7 +118,8 @@ def fft_kernel_c2c_mul(x: jax.Array, bank, *, inverse: bool = False,
     im = flat.imag.astype(jnp.float32)
     # The output plane is T x the input tile; scale the VMEM budget so
     # input, bank and product planes coexist.
-    (re, im), tile = _tile_and_pad([re, im], b, n * (4 + 2 * t) // 8)
+    (re, im), tile = _tile_and_pad([re, im], b, n * (4 + 2 * t) // 8,
+                                   tile_b=tile_b)
     out_re, out_im = fft_mul_pallas(re, im, fbr, fbi, tile_b=tile,
                                     inverse=inverse, interpret=interpret,
                                     radices=radices)
@@ -119,14 +128,18 @@ def fft_kernel_c2c_mul(x: jax.Array, bank, *, inverse: bool = False,
     return (out_re + 1j * out_im).reshape(*lead, t, n)
 
 
-def _row_tile(r: int, c: int, elem_bytes: int = 4, buffers: int = 10) -> int:
+def _row_tile(r: int, c: int, elem_bytes: int = 4, buffers: int = 10,
+              override: int | None = None) -> int:
     """Largest row tile that divides ``r`` and fits the VMEM budget.
 
     A divisor search (not pow2 halving): ``batch_tile`` returns
     lane-aligned but often non-pow2 budgets, and halving those would
     collapse to tile=1 for the pow2 row counts the fused passes serve.
+    An explicit ``override`` (the autotuner's tile) is snapped down to
+    the nearest divisor of ``r`` the same way.
     """
-    tile = max(min(batch_tile(c, elem_bytes, buffers=buffers), r), 1)
+    tile = max(min(batch_tile(c, elem_bytes, buffers=buffers,
+                              override=override), r), 1)
     while tile > 1 and r % tile:
         tile -= 1
     return tile
@@ -143,7 +156,8 @@ def _flatten3(x: jax.Array) -> tuple[jax.Array, tuple[int, ...]]:
 
 def fft_kernel_c2c_t(x: jax.Array, *, twiddle=None, inverse: bool = False,
                      interpret: bool | None = None,
-                     radices: tuple[int, ...] = DEFAULT_RADICES) -> jax.Array:
+                     radices: tuple[int, ...] = DEFAULT_RADICES,
+                     tile_b: int | None = None) -> jax.Array:
     """Fused C2C FFT + transposed write: (..., R, C) -> (..., C, R).
 
     The hand-off transpose of a 2-D / N-D / four-step transform rides the
@@ -164,7 +178,7 @@ def fft_kernel_c2c_t(x: jax.Array, *, twiddle=None, inverse: bool = False,
     flat, lead = _flatten3(x)
     re = flat.real.astype(jnp.float32)
     im = flat.imag.astype(jnp.float32)
-    tile = _row_tile(r, c)
+    tile = _row_tile(r, c, override=tile_b)
     if twiddle is not None:
         tw = jnp.asarray(twiddle)
         ftwr = tw.real.astype(jnp.float32)
@@ -181,8 +195,8 @@ def fft_kernel_c2c_t(x: jax.Array, *, twiddle=None, inverse: bool = False,
 def fft_kernel_c2c_axis1(x: jax.Array, *, twiddle=None,
                          inverse: bool = False,
                          interpret: bool | None = None,
-                         radices: tuple[int, ...] = DEFAULT_RADICES
-                         ) -> jax.Array:
+                         radices: tuple[int, ...] = DEFAULT_RADICES,
+                         tile_b: int | None = None) -> jax.Array:
     """C2C FFT over axis -2, layout preserved: (..., R, C) -> (..., R, C).
 
     The four-step column pass: transpose-read + FFT + optional twiddle
@@ -200,7 +214,7 @@ def fft_kernel_c2c_axis1(x: jax.Array, *, twiddle=None,
     flat, lead = _flatten3(x)
     re = flat.real.astype(jnp.float32)
     im = flat.imag.astype(jnp.float32)
-    tile = _row_tile(c, r)
+    tile = _row_tile(c, r, override=tile_b)
     if twiddle is not None:
         tw = jnp.asarray(twiddle)
         ftwr = tw.real.astype(jnp.float32)
@@ -217,7 +231,8 @@ def fft_kernel_c2c_axis1(x: jax.Array, *, twiddle=None,
 
 
 def fft_kernel_r2c_t(x: jax.Array, *, interpret: bool | None = None,
-                     radices: tuple[int, ...] = DEFAULT_RADICES) -> jax.Array:
+                     radices: tuple[int, ...] = DEFAULT_RADICES,
+                     tile_b: int | None = None) -> jax.Array:
     """Fused R2C + transposed write: (..., R, C) real -> (..., C/2+1, R)."""
     if interpret is None:
         interpret = use_interpret()
@@ -229,7 +244,7 @@ def fft_kernel_r2c_t(x: jax.Array, *, interpret: bool | None = None,
     if c < 4:
         raise ValueError(f"fused R2C needs C >= 4, got {c}")
     flat, lead = _flatten3(x.astype(jnp.float32))
-    tile = _row_tile(r, c)
+    tile = _row_tile(r, c, override=tile_b)
     out_re, out_im = rfft_t_pallas(flat, tile_r=tile, interpret=interpret,
                                    radices=radices)
     return (out_re + 1j * out_im).reshape(*lead, c // 2 + 1, r)
@@ -258,7 +273,8 @@ def transpose_kernel(x: jax.Array, *,
 
 
 def fft_kernel_r2c(x: jax.Array, *, interpret: bool | None = None,
-                   radices: tuple[int, ...] = DEFAULT_RADICES) -> jax.Array:
+                   radices: tuple[int, ...] = DEFAULT_RADICES,
+                   tile_b: int | None = None) -> jax.Array:
     """Batched pow2 R2C FFT: (..., N) real -> (..., N/2+1) complex.
 
     Packs N reals as N/2 complex points, so it accepts N up to
@@ -275,7 +291,7 @@ def fft_kernel_r2c(x: jax.Array, *, interpret: bool | None = None,
         from repro.fft.stockham import rfft
         return rfft(x)
     flat, lead, b = _flatten(x.astype(jnp.float32))
-    (flat,), tile = _tile_and_pad([flat], b, n)
+    (flat,), tile = _tile_and_pad([flat], b, n, tile_b=tile_b)
     out_re, out_im = rfft_pallas(flat, tile_b=tile, interpret=interpret,
                                  radices=radices)
     if out_re.shape[0] != b:
@@ -284,7 +300,8 @@ def fft_kernel_r2c(x: jax.Array, *, interpret: bool | None = None,
 
 
 def fft_kernel_c2r(x: jax.Array, *, interpret: bool | None = None,
-                   radices: tuple[int, ...] = DEFAULT_RADICES) -> jax.Array:
+                   radices: tuple[int, ...] = DEFAULT_RADICES,
+                   tile_b: int | None = None) -> jax.Array:
     """Batched pow2 C2R inverse: (..., N/2+1) half-spectrum -> (..., N) real.
 
     The exact inverse of :func:`fft_kernel_r2c` (1/N normalised, matching
@@ -304,7 +321,7 @@ def fft_kernel_c2r(x: jax.Array, *, interpret: bool | None = None,
     flat, lead, b = _flatten(x)
     re = flat.real.astype(jnp.float32)
     im = flat.imag.astype(jnp.float32)
-    (re, im), tile = _tile_and_pad([re, im], b, n)
+    (re, im), tile = _tile_and_pad([re, im], b, n, tile_b=tile_b)
     out = irfft_pallas(re, im, tile_b=tile, interpret=interpret,
                        radices=radices)
     if out.shape[0] != b:

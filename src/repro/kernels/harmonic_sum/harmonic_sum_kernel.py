@@ -55,7 +55,13 @@ def _hsum_body(p_ref, out_ref, *, n_harmonics: int):
 def harmonic_sum_pallas(power: jax.Array, n_harmonics: int, *,
                         tile_b: int = 8, interpret: bool = False):
     b, n = power.shape
-    assert b % tile_b == 0
+    # A ValueError, not an assert: asserts vanish under ``python -O`` and
+    # a non-dividing tile would silently corrupt the grid partition.
+    if tile_b < 1 or b % tile_b:
+        raise ValueError(
+            f"batch={b} is not a multiple of its tile ({tile_b}); the ops "
+            f"layer (repro.kernels.harmonic_sum.ops) pads batches to tile "
+            f"multiples — route through it or pass a dividing tile")
     levels = int(math.log2(n_harmonics)) + 1
     fn = pl.pallas_call(
         functools.partial(_hsum_body, n_harmonics=n_harmonics),

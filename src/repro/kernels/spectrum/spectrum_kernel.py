@@ -32,7 +32,13 @@ def _spectrum_body(re_ref, im_ref, p_ref, mean_ref, var_ref):
 def power_spectrum_stats_pallas(re: jax.Array, im: jax.Array, *,
                                 tile_b: int = 8, interpret: bool = False):
     b, n = re.shape
-    assert b % tile_b == 0
+    # A ValueError, not an assert: asserts vanish under ``python -O`` and
+    # a non-dividing tile would silently corrupt the grid partition.
+    if tile_b < 1 or b % tile_b:
+        raise ValueError(
+            f"batch={b} is not a multiple of its tile ({tile_b}); the ops "
+            f"layer (repro.kernels.spectrum.ops) pads batches to tile "
+            f"multiples — route through it or pass a dividing tile")
     row = pl.BlockSpec((tile_b, n), lambda i: (i, 0))
     vec = pl.BlockSpec((tile_b,), lambda i: (i,))
     fn = pl.pallas_call(

@@ -89,20 +89,49 @@ class PlanSweepCache:
         self._plan_fn = plan_fn
         self._sweep_fn = sweep_fn
         self._power_model = power_model or PowerModel(device)
-        self._entries: dict[ShapeKey, CacheEntry] = {}
+        # Entries are keyed on (shape key, active tuned kernel config):
+        # the plan a shape resolves to depends on the tuning context, so
+        # a re-tune (or toggling REPRO_FFT_DISABLE_TUNING) can never be
+        # served a stale plan built under the previous config.
+        self._entries: dict[tuple, CacheEntry] = {}
         self.stats = CacheStats()
 
     def __len__(self) -> int:
         return len(self._entries)
 
+    def _tuned_config(self, key: ShapeKey):
+        """The tuned config this key's plan build will resolve to.
+
+        Every kind keys on the config its build actually consults — the
+        context memoises, so repeated entry lookups never re-read the
+        tuning cache.  FDAS entries with ``segment=0`` resolve the conv
+        key exactly like ``fft.convolve.conv_plan`` will at build time
+        (an explicit segment is already part of the ShapeKey); pulsar
+        entries key on their inner FFT length's config.
+        """
+        from repro.tune.context import plan_config
+        if key.kind == KIND_FDAS:
+            if key.segment:
+                return None          # segment pinned in the ShapeKey itself
+            from repro.search.templates import TemplateBank
+            bank = TemplateBank.linear(
+                zmax=max((key.templates - 1) / 2.0, 0.0),
+                n_templates=key.templates)
+            return plan_config((key.n // 2 + 1, bank.taps, key.templates),
+                               "conv")
+        if key.kind == KIND_PULSAR:
+            return plan_config((key.n,), key.transform)
+        return plan_config(key.shape or (key.n,), key.transform)
+
     def entry(self, key: ShapeKey) -> CacheEntry:
-        cached = self._entries.get(key)
+        cache_key = (key, self._tuned_config(key))
+        cached = self._entries.get(cache_key)
         if cached is not None:
             self.stats.hits += 1
             return cached
         self.stats.misses += 1
         entry = self._build(key)
-        self._entries[key] = entry
+        self._entries[cache_key] = entry
         return entry
 
     def _build(self, key: ShapeKey) -> CacheEntry:

@@ -64,6 +64,25 @@ class TestFFTKernel:
         with pytest.raises(ValueError, match="repro.fft.plan"):
             fft_kernel_c2c(x, interpret=True)
 
+    def test_n1_forward_inverse_identity(self):
+        """Length-1 DFT is the identity BOTH ways (the old inverse branch
+        was a silent ``x / 1`` no-op copy standing in for the real path)."""
+        x = rand_c((3, 1))
+        fwd = fft_kernel_c2c(x, interpret=True)
+        inv = fft_kernel_c2c(x, inverse=True, interpret=True)
+        np.testing.assert_array_equal(np.asarray(fwd), np.asarray(x))
+        np.testing.assert_array_equal(np.asarray(inv), np.asarray(x))
+        # parity with the jnp oracle at n=1 (fft == ifft == identity)
+        np.testing.assert_allclose(fwd, jnp.fft.fft(x), rtol=1e-6)
+        np.testing.assert_allclose(inv, jnp.fft.ifft(x), rtol=1e-6)
+
+    def test_explicit_tile_b_override(self):
+        """The autotuner hook: an explicit tile replaces the heuristic and
+        stays numerically identical."""
+        x = rand_c((12, 256))
+        got = fft_kernel_c2c(x, interpret=True, tile_b=4)
+        np.testing.assert_allclose(got, jnp.fft.fft(x), rtol=3e-4, atol=3e-4)
+
     def test_tile_multiple_batch_skips_padding(self, monkeypatch):
         """A tile-multiple batch must not pay the pad-then-slice trip."""
         import repro.kernels.fft.ops as ops
@@ -200,3 +219,31 @@ class TestKernelInputValidation:
         with pytest.raises(ValueError, match="non-empty trailing"):
             power_spectrum_stats_kernel(jnp.ones((2, 0), jnp.complex64),
                                         interpret=True)
+
+    def test_fft_pallas_rejects_non_dividing_tile(self):
+        """Kernel-level guards carry the offending shapes (ValueError, not
+        assert: asserts vanish under ``python -O``)."""
+        from repro.kernels.fft.fft_kernel import fft_pallas
+        re = jnp.ones((10, 64))
+        with pytest.raises(ValueError, match=r"batch=10.*\(4\)"):
+            fft_pallas(re, re, tile_b=4, interpret=True)
+
+    def test_fft_pallas_rejects_non_pow2_length(self):
+        from repro.kernels.fft.fft_kernel import fft_pallas
+        re = jnp.ones((4, 48))
+        with pytest.raises(ValueError, match="power of two, got 48"):
+            fft_pallas(re, re, tile_b=4, interpret=True)
+
+    def test_harmonic_sum_pallas_rejects_non_dividing_tile(self):
+        from repro.kernels.harmonic_sum.harmonic_sum_kernel import \
+            harmonic_sum_pallas
+        p = jnp.ones((10, 64))
+        with pytest.raises(ValueError, match=r"batch=10.*\(4\)"):
+            harmonic_sum_pallas(p, 8, tile_b=4, interpret=True)
+
+    def test_spectrum_pallas_rejects_non_dividing_tile(self):
+        from repro.kernels.spectrum.spectrum_kernel import \
+            power_spectrum_stats_pallas
+        re = jnp.ones((10, 64))
+        with pytest.raises(ValueError, match=r"batch=10.*\(4\)"):
+            power_spectrum_stats_pallas(re, re, tile_b=4, interpret=True)
