@@ -20,9 +20,12 @@ from repro.core.perf_model import WorkloadProfile, absolute_profile
 from repro.core.power_model import PowerModel
 from repro.core.realtime import RealTimeBudget, devices_required, extra_hardware
 from repro.core.scheduler import DVFSScheduler, PipelineReport, Stage
-from repro.core.workloads import (ConvCase, FFTCase, conv_workload,
-                                  fdas_total_profile, fdas_workload,
-                                  fft_workload, paper_lengths,
+from repro.core.workloads import (ConvCase, FFTCase, PulsarCase,
+                                  conv_workload, fdas_total_profile,
+                                  fdas_workload, fft_workload,
+                                  merge_profiles, paper_lengths,
+                                  pulsar_search_total_profile,
+                                  pulsar_search_workload,
                                   roofline_workload)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -428,15 +428,17 @@ def fdas_workload(case: ConvCase, device: DeviceSpec, *,
     return [fft_prof, conv_prof, detect]
 
 
-def fdas_total_profile(case: ConvCase, device: DeviceSpec, *,
-                       series_n: int | None = None) -> WorkloadProfile:
-    """All FDAS stages merged into one profile (service-level sweeps)."""
-    profs = fdas_workload(case, device, series_n=series_n)
+def merge_profiles(name: str,
+                   profs: list[WorkloadProfile]) -> WorkloadProfile:
+    """Sum stage profiles into one (for service-level single-clock sweeps).
+
+    Times and FLOPs add; contention is t_mem-weighted (the memory-bound
+    fraction is what the contention term scales, Fig. 6)."""
     t_mem = sum(p.t_mem for p in profs)
     contention = (sum(p.contention * p.t_mem for p in profs) / t_mem
                   if t_mem > 0 else 0.0)
     return WorkloadProfile(
-        name=f"fdas-n{case.n}-t{case.templates}",
+        name=name,
         t_mem=t_mem,
         t_issue=sum(p.t_issue for p in profs),
         t_cache=sum(p.t_cache for p in profs),
@@ -445,6 +447,151 @@ def fdas_total_profile(case: ConvCase, device: DeviceSpec, *,
         contention=contention,
         flops=sum(p.flops for p in profs),
     )
+
+
+def fdas_total_profile(case: ConvCase, device: DeviceSpec, *,
+                       series_n: int | None = None) -> WorkloadProfile:
+    """All FDAS stages merged into one profile (service-level sweeps)."""
+    return merge_profiles(f"fdas-n{case.n}-t{case.templates}",
+                          fdas_workload(case, device, series_n=series_n))
+
+
+@dataclasses.dataclass(frozen=True)
+class PulsarCase:
+    """One end-to-end pulsar-search configuration (repro.search.pipeline).
+
+    A batch holds ``n_rows`` filterbanks of (nchan, ntime) float32
+    samples (the Eq. 6 memory budget applied to the pipeline's *input*);
+    each expands to ``dm_trials`` dedispersed series, which FDAS turns
+    into (dm_trials * templates) power rows of ``nbins`` each for the
+    harmonic-sum and sift stages.
+    """
+
+    nchan: int
+    ntime: int
+    dm_trials: int
+    templates: int
+    taps: int
+    n_harmonics: int = 8
+    precision: str = "fp32"
+    batch_bytes: float = 2e9
+    radices: tuple[int, ...] | None = None
+    name: str = ""
+
+    def __post_init__(self):
+        if min(self.nchan, self.ntime, self.dm_trials, self.templates,
+               self.taps) < 1:
+            raise ValueError(
+                f"PulsarCase needs every dimension >= 1, got nchan="
+                f"{self.nchan} ntime={self.ntime} dm_trials="
+                f"{self.dm_trials} templates={self.templates} "
+                f"taps={self.taps}")
+        if self.n_harmonics < 1 or self.n_harmonics & (self.n_harmonics - 1):
+            raise ValueError(
+                f"n_harmonics must be a power of two, got "
+                f"{self.n_harmonics}")
+        if self.precision not in COMPLEX_BYTES:
+            raise ValueError(f"unknown precision {self.precision!r}")
+        if not self.name:
+            object.__setattr__(
+                self, "name",
+                f"pulsar-c{self.nchan}x{self.ntime}-d{self.dm_trials}"
+                f"-t{self.templates}-{self.precision}")
+
+    @property
+    def sample_bytes(self) -> int:
+        """Bytes of one filterbank sample (real, half the complex size)."""
+        return COMPLEX_BYTES[self.precision] // 2
+
+    @property
+    def n_rows(self) -> int:
+        """Eq. 6: filterbanks per memory-budgeted batch."""
+        return max(int(self.batch_bytes
+                       // (self.nchan * self.ntime * self.sample_bytes)), 1)
+
+    @property
+    def nbins(self) -> int:
+        return self.ntime // 2 + 1
+
+
+def pulsar_search_workload(case: PulsarCase,
+                           device: DeviceSpec) -> list[WorkloadProfile]:
+    """Per-stage profiles of the end-to-end search: dedisp -> fdas ->
+    harmonic-sum -> sift.
+
+    Each stage's traffic follows its kernel's actual HBM/VMEM pattern
+    (the same discipline as ``fft_workload`` vs ``repro.fft.plan``):
+    dedispersion reads the (C, N) block once and writes D series while
+    re-reading VMEM D*C times; FDAS is the merged R2C + overlap-save
+    model over D series per filterbank; the harmonic-sum plane kernel
+    reads the power plane once and writes only (stat, level); sifting
+    is one streaming top-k pass.  These four feed ``dvfs.sweep`` +
+    ``DVFSScheduler`` for the per-stage clock plan.
+    """
+    rows = case.n_rows
+    sb = float(case.sample_bytes)
+    peak = device.peak_flops * PRECISION_PEAK[case.precision]
+    c, n, d, t = case.nchan, case.ntime, case.dm_trials, case.templates
+
+    # --- dedispersion: shift-and-sum, memory-bound ----------------------
+    dd_hbm = (c + d) * n * sb * rows                 # read block, write D
+    dd_flops = float(d) * c * n * rows               # one add per (dm, ch)
+    dd_cache = 2.0 * d * c * n * sb * rows           # VMEM re-reads
+    dedisp = WorkloadProfile(
+        name="dedisp",
+        t_mem=dd_hbm / device.hbm_bandwidth,
+        t_issue=dd_flops / (peak * 0.4),
+        t_cache=dd_cache / device.cache_bandwidth,
+        t_compute=dd_flops / peak,
+        contention=0.01,
+        flops=dd_flops,
+    )
+
+    # --- FDAS (R2C + matched filter) over D series per filterbank -------
+    conv_case = ConvCase(
+        n=case.nbins, templates=t, taps=case.taps,
+        precision=case.precision,
+        batch_bytes=float(rows * d) * case.nbins
+        * COMPLEX_BYTES[case.precision],
+        radices=case.radices)
+    fdas = dataclasses.replace(
+        merge_profiles("fdas", fdas_workload(conv_case, device,
+                                             series_n=n)[:2]),
+        name="fdas")
+
+    # --- harmonic sum: fused plane kernel (stat + level out only) -------
+    plane_rows = float(rows * d) * t
+    hs_hbm = plane_rows * case.nbins * (sb + 2 * sb)  # read P, write 2
+    hs_levels = max(case.n_harmonics.bit_length(), 1)
+    hs_flops = plane_rows * case.nbins * (case.n_harmonics + 3 * hs_levels)
+    hs_cache = 2.0 * plane_rows * case.nbins * sb * hs_levels
+    hsum = WorkloadProfile(
+        name="harmonic-sum",
+        t_mem=hs_hbm / device.hbm_bandwidth,
+        t_issue=hs_flops / (peak * 0.4),
+        t_cache=hs_cache / device.cache_bandwidth,
+        t_compute=hs_flops / peak,
+        contention=0.01,
+        flops=hs_flops,
+    )
+
+    # --- sift: one streaming top-k over the statistic volume ------------
+    sf_bytes = plane_rows * case.nbins * 2 * sb      # read stat + level
+    sf_flops = 5.0 * plane_rows * case.nbins
+    sift = WorkloadProfile(
+        name="sift",
+        t_mem=sf_bytes / device.hbm_bandwidth,
+        t_issue=sf_flops / (peak * 0.4),
+        t_compute=sf_flops / peak,
+        flops=sf_flops,
+    )
+    return [dedisp, fdas, hsum, sift]
+
+
+def pulsar_search_total_profile(case: PulsarCase,
+                                device: DeviceSpec) -> WorkloadProfile:
+    """All four stages merged into one profile (service-level sweeps)."""
+    return merge_profiles(case.name, pulsar_search_workload(case, device))
 
 
 def roofline_workload(

@@ -7,7 +7,9 @@ Each kernel package holds:
 
 Kernels:
   fft           fused-stage Stockham FFT, whole transform VMEM-resident
-  harmonic_sum  strided decimate-and-add harmonic summing (no gathers)
+  harmonic_sum  strided decimate-and-add harmonic summing (no gathers);
+                the fused *plane* variant feeds the pulsar pipeline
+  dedisp        brute-force many-DM dedispersion (static shift-and-sum)
   spectrum      fused |X|^2 + mean/variance (one HBM pass)
 
 The kernels target TPU (pl.pallas_call + BlockSpec); on this CPU container

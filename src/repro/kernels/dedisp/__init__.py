@@ -1,0 +1,11 @@
+"""Brute-force incoherent dedispersion (many-DM shift-and-sum).
+
+  dedisp_kernel  pl.pallas_call body: statically unrolled per-(DM, delay
+                 group) ``lax.slice`` shifts over a VMEM-resident block
+  ops            public wrapper (guards, batch tiling, lead-dim plumbing)
+  ref            gather-based pure-jnp oracle the tests assert against
+"""
+from repro.kernels.dedisp.ops import dedisperse_kernel
+from repro.kernels.dedisp.ref import dedisperse_ref
+
+__all__ = ["dedisperse_kernel", "dedisperse_ref"]

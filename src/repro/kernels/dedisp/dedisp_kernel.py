@@ -1,0 +1,88 @@
+"""Dedispersion Pallas kernel — gather-free shift-and-sum.
+
+GPU dedispersion engines walk a (DM, channel) delay table with global
+gathers; TPU has no efficient gather, so we ADAPT the algorithm the same
+way the harmonic-sum kernel does (DESIGN.md: rethink for the TPU memory
+hierarchy): every delay is a *static* integer known at trace time, so
+
+  x[c, t + d]  over t = 0..N-1-d  ==  the affine ``lax.slice`` x[c, d:]
+
+zero-padded back to length N.  The kernel unrolls the (DM, delay) table
+statically, grouping channels that share a delay so each distinct shift
+is materialised once per DM trial; the (TILE_B, C, N) filterbank block
+is loaded from HBM exactly once and every one of the D * C accumulations
+reads it from VMEM.
+
+Grid: 1-D over batch tiles (whole channels and the whole time axis stay
+resident — a time-tiled variant would need halo reads of max-delay
+samples per tile, the overhead-access t_o term the paper's Sec. 5
+discussion prices).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _shift(x: jax.Array, d: int) -> jax.Array:
+    """x[:, d:] zero-padded back to (B, N): the time-shift by ``d``."""
+    if d == 0:
+        return x
+    b, n = x.shape
+    return jnp.pad(jax.lax.slice(x, (0, d), (b, n)), ((0, 0), (0, d)))
+
+
+def _dedisp_body(fb_ref, out_ref, *, delays: tuple[tuple[int, ...], ...]):
+    fb = fb_ref[...]                                 # (B, C, N)
+    for trial, row in enumerate(delays):
+        # Channels sharing a delay are summed first, then shifted once.
+        groups: dict[int, list[int]] = {}
+        for ch, d in enumerate(row):
+            groups.setdefault(d, []).append(ch)
+        acc = None
+        for d, chans in sorted(groups.items()):
+            g = fb[:, chans[0], :]
+            for ch in chans[1:]:
+                g = g + fb[:, ch, :]
+            g = _shift(g, d)
+            acc = g if acc is None else acc + g
+        out_ref[:, trial, :] = acc
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("delays", "tile_b", "interpret"))
+def dedisperse_pallas(fb: jax.Array,
+                      delays: tuple[tuple[int, ...], ...], *,
+                      tile_b: int = 1, interpret: bool = False):
+    """(b, C, N) filterbanks + static (D, C) delay table -> (b, D, N)."""
+    b, nchan, n = fb.shape
+    # A ValueError, not an assert: asserts vanish under ``python -O`` and
+    # a non-dividing tile would silently corrupt the grid partition.
+    if tile_b < 1 or b % tile_b:
+        raise ValueError(
+            f"batch={b} is not a multiple of its tile ({tile_b}); the ops "
+            f"layer (repro.kernels.dedisp.ops) pads batches to tile "
+            f"multiples — route through it or pass a dividing tile")
+    ndm = len(delays)
+    for trial, row in enumerate(delays):
+        if len(row) != nchan:
+            raise ValueError(
+                f"delay row {trial} has {len(row)} channels; filterbank "
+                f"has {nchan} (shape {fb.shape})")
+        for d in row:
+            if not 0 <= d < n:
+                raise ValueError(
+                    f"delay {d} of trial {trial} outside [0, ntime={n}); "
+                    f"clip the DM grid to the block length")
+    fn = pl.pallas_call(
+        functools.partial(_dedisp_body, delays=delays),
+        grid=(b // tile_b,),
+        in_specs=[pl.BlockSpec((tile_b, nchan, n), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((tile_b, ndm, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, ndm, n), fb.dtype),
+        interpret=interpret,
+    )
+    return fn(fb)

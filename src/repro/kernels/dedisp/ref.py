@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the dedispersion kernel.
+
+Definition (zero-padded convention — see kernel docstring):
+
+  out[..., d, t] = sum_c  x[..., c, t + delay[d, c]]   with x[..., c, i] = 0
+                                                       for i >= ntime
+
+implemented with the gather the TPU kernel avoids.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dedisperse_ref(fb: jax.Array, delays) -> jax.Array:
+    """(..., C, N) filterbanks + (D, C) delays -> (..., D, N)."""
+    delays = jnp.asarray(np.asarray(delays, dtype=np.int64))
+    n = fb.shape[-1]
+    t = jnp.arange(n)
+    idx = delays[:, :, None] + t[None, None, :]          # (D, C, N)
+    valid = idx < n
+    x = fb[..., None, :, :]                              # (..., 1, C, N)
+    shape = (*fb.shape[:-2], *idx.shape)                 # (..., D, C, N)
+    g = jnp.take_along_axis(jnp.broadcast_to(x, shape),
+                            jnp.broadcast_to(idx.clip(0, n - 1), shape),
+                            axis=-1)
+    g = jnp.where(valid, g, 0.0)
+    return jnp.sum(g, axis=-2)

@@ -1,3 +1,7 @@
-from repro.kernels.harmonic_sum.ops import harmonic_sum_kernel
+from repro.kernels.harmonic_sum.ops import (harmonic_sum_kernel,
+                                            harmonic_sum_plane)
+from repro.kernels.harmonic_sum.ref import (harmonic_sum_plane_ref,
+                                            harmonic_sum_ref)
 
-__all__ = ["harmonic_sum_kernel"]
+__all__ = ["harmonic_sum_kernel", "harmonic_sum_plane",
+           "harmonic_sum_plane_ref", "harmonic_sum_ref"]

@@ -50,6 +50,59 @@ def _hsum_body(p_ref, out_ref, *, n_harmonics: int):
         out_ref[:, lev, :] = acc
 
 
+def _hsum_plane_body(p_ref, stat_ref, lev_ref, *, n_harmonics: int):
+    """Fused ladder + normalisation + best-level reduction.
+
+    The production pipeline path: builds the same doubling ladder as
+    ``_hsum_body`` but never writes it — each level is normalised in
+    VMEM to the detection statistic  z_h = (S_h - h) / sqrt(h)  (the
+    FDAS power plane is ~chi^2(2)/2 under the null, per-bin mean 1) and
+    max-reduced on the spot.  Only the (B, N) winning statistic and its
+    (B, N) level index leave VMEM: the (LEVELS, N) ladder of the demo
+    kernel never makes an HBM round-trip.
+    """
+    p = p_ref[...]                                   # (B, N)
+    levels = int(math.log2(n_harmonics)) + 1
+    acc = p
+    best = acc - 1.0                                 # z_1 = S_1 - 1
+    best_lev = jnp.zeros(p.shape, jnp.int32)
+    h = 1
+    for lev in range(1, levels):
+        h *= 2
+        for j in range(h // 2 + 1, h + 1):
+            acc = acc + _decimate(p, j)
+        z = (acc - h) * (1.0 / math.sqrt(h))
+        better = z > best
+        best = jnp.where(better, z, best)
+        best_lev = jnp.where(better, lev, best_lev)
+    stat_ref[...] = best
+    lev_ref[...] = best_lev
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_harmonics", "tile_b", "interpret"))
+def harmonic_sum_plane_pallas(power: jax.Array, n_harmonics: int, *,
+                              tile_b: int = 8, interpret: bool = False):
+    """(b, n) power -> ((b, n) best statistic, (b, n) int32 level)."""
+    b, n = power.shape
+    if tile_b < 1 or b % tile_b:
+        raise ValueError(
+            f"batch={b} is not a multiple of its tile ({tile_b}); the ops "
+            f"layer (repro.kernels.harmonic_sum.ops) pads batches to tile "
+            f"multiples — route through it or pass a dividing tile")
+    fn = pl.pallas_call(
+        functools.partial(_hsum_plane_body, n_harmonics=n_harmonics),
+        grid=(b // tile_b,),
+        in_specs=[pl.BlockSpec((tile_b, n), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((tile_b, n), lambda i: (i, 0)),
+                   pl.BlockSpec((tile_b, n), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((b, n), power.dtype),
+                   jax.ShapeDtypeStruct((b, n), jnp.int32)],
+        interpret=interpret,
+    )
+    return tuple(fn(power))
+
+
 @functools.partial(jax.jit,
                    static_argnames=("n_harmonics", "tile_b", "interpret"))
 def harmonic_sum_pallas(power: jax.Array, n_harmonics: int, *,

@@ -1,29 +1,61 @@
-"""Public wrapper for the harmonic-sum kernel."""
+"""Public wrappers for the harmonic-sum kernels.
+
+Two entry points share one guarded input path:
+
+* :func:`harmonic_sum_kernel` — the demo ladder: (..., N) power spectra
+  to the full (..., LEVELS, N) doubling ladder (Sec. 5.3 figure fodder).
+* :func:`harmonic_sum_plane` — the production pipeline stage: the same
+  ladder built, normalised and max-reduced inside VMEM, returning only
+  the (..., N) best detection statistic and its level index — the
+  (LEVELS, N) ladder never round-trips through HBM.
+
+Edge cases (tested in tests/test_kernels.py):
+
+* ``n_harmonics=1`` is valid: a single-level ladder — the demo returns
+  the input as its one level, the plane returns  z_1 = P - 1  with level
+  index 0 everywhere.
+* An empty trailing axis (shape (..., 0)) raises ``ValueError``: a
+  zero-length spectrum has no bins to sum (and the kernel's grid maths
+  would divide by zero).
+* Complex input raises ``ValueError`` — power spectra are real by
+  construction; silently taking ``.real`` would hide an upstream bug
+  (pass ``|X|**2``, not the spectrum itself).
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import batch_tile, use_interpret
-from repro.kernels.harmonic_sum.harmonic_sum_kernel import harmonic_sum_pallas
+from repro.kernels.harmonic_sum.harmonic_sum_kernel import (
+    harmonic_sum_pallas, harmonic_sum_plane_pallas)
 
 
-def harmonic_sum_kernel(power: jax.Array, n_harmonics: int = 32, *,
-                        interpret: bool | None = None) -> jax.Array:
-    """(..., N) power spectra -> (..., LEVELS, N) harmonic-sum ladder."""
-    if interpret is None:
-        interpret = use_interpret()
-    # A ValueError, not an assert: asserts vanish under ``python -O`` and
-    # this guards caller input, not an internal invariant.
+def _checked_power(power, n_harmonics: int, fn_name: str) -> jax.Array:
+    """Shared shape/dtype guards -> the (..., N) f32 power array.
+
+    ValueErrors, not asserts: asserts vanish under ``python -O`` and
+    these guard caller input, not internal invariants.
+    """
     if n_harmonics < 1 or n_harmonics & (n_harmonics - 1):
         raise ValueError(
             f"n_harmonics must be a power of two, got {n_harmonics}")
-    power = jnp.asarray(power, jnp.float32)
+    power = jnp.asarray(power)
+    if jnp.issubdtype(power.dtype, jnp.complexfloating):
+        raise ValueError(
+            f"{fn_name} takes real power (|X|**2), got complex dtype "
+            f"{power.dtype} with shape {power.shape}")
+    if power.ndim < 1 or power.shape[-1] == 0:
+        raise ValueError(
+            f"{fn_name} needs a non-empty trailing axis, got shape "
+            f"{power.shape}")
+    return power.astype(jnp.float32)
+
+
+def _tiled(power: jax.Array) -> tuple[jax.Array, int, int, tuple[int, ...]]:
+    """Flatten lead dims and pad the batch to a VMEM-sized tile multiple."""
     lead = power.shape[:-1]
     n = power.shape[-1]
-    if n == 0:
-        raise ValueError("harmonic_sum_kernel needs a non-empty trailing "
-                         f"axis, got shape {power.shape}")
     b = 1
     for d in lead:
         b *= d
@@ -32,6 +64,36 @@ def harmonic_sum_kernel(power: jax.Array, n_harmonics: int = 32, *,
     pad = (-b) % tile
     if pad:
         p2 = jnp.pad(p2, ((0, pad), (0, 0)))
+    return p2, b, tile, lead
+
+
+def harmonic_sum_kernel(power: jax.Array, n_harmonics: int = 32, *,
+                        interpret: bool | None = None) -> jax.Array:
+    """(..., N) power spectra -> (..., LEVELS, N) harmonic-sum ladder."""
+    if interpret is None:
+        interpret = use_interpret()
+    power = _checked_power(power, n_harmonics, "harmonic_sum_kernel")
+    p2, b, tile, lead = _tiled(power)
     out = harmonic_sum_pallas(p2, n_harmonics, tile_b=tile,
                               interpret=interpret)[:b]
-    return out.reshape(*lead, out.shape[-2], n)
+    return out.reshape(*lead, out.shape[-2], power.shape[-1])
+
+
+def harmonic_sum_plane(power: jax.Array, n_harmonics: int = 8, *,
+                       interpret: bool | None = None
+                       ) -> tuple[jax.Array, jax.Array]:
+    """(..., N) power plane -> ((..., N) statistic, (..., N) int32 level).
+
+    The statistic is  max_h (S_h - h) / sqrt(h)  over the doubling
+    ladder h = 1, 2, ..., n_harmonics, valid for planes normalised to
+    per-bin mean 1 under the null (the FDAS power plane); ``level`` is
+    log2(h) of the winning ladder rung (earliest wins ties).
+    """
+    if interpret is None:
+        interpret = use_interpret()
+    power = _checked_power(power, n_harmonics, "harmonic_sum_plane")
+    p2, b, tile, lead = _tiled(power)
+    stat, lev = harmonic_sum_plane_pallas(p2, n_harmonics, tile_b=tile,
+                                          interpret=interpret)
+    n = power.shape[-1]
+    return stat[:b].reshape(*lead, n), lev[:b].reshape(*lead, n)

@@ -32,3 +32,19 @@ def harmonic_sum_ref(power: jax.Array, n_harmonics: int) -> jax.Array:
         acc = acc + jnp.sum(gathered, axis=-2)
         outs.append(acc)
     return jnp.stack(outs, axis=-2)
+
+
+def harmonic_sum_plane_ref(power: jax.Array, n_harmonics: int):
+    """Oracle for the fused plane kernel: (best statistic, level index).
+
+    Normalises every ladder level to  z_h = (S_h - h) / sqrt(h)  and
+    takes the maximum (earliest level wins ties, matching the kernel's
+    strict ``z > best`` update).
+    """
+    ladder = harmonic_sum_ref(power, n_harmonics)          # (..., L, n)
+    levels = ladder.shape[-2]
+    hs = jnp.asarray([2.0 ** lev for lev in range(levels)])
+    z = (ladder - hs[:, None]) / jnp.sqrt(hs)[:, None]
+    best_lev = jnp.argmax(z, axis=-2).astype(jnp.int32)
+    best = jnp.max(z, axis=-2)
+    return best, best_lev

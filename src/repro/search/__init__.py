@@ -1,22 +1,32 @@
-"""Fourier-Domain Acceleration Search (FDAS) on the FFT substrate.
+"""Pulsar searching on the FFT substrate.
 
   templates  acceleration responses + TemplateBank (host-side, cached)
   fdas       matched-filter plane, power, candidate extraction, and the
-             end-to-end fdas_search() pipeline
+             end-to-end fdas_search() acceleration search
+  sift       candidate sifting/clustering (threshold, DM/harmonic
+             dedupe, top-k) — the pipeline's last stage
+  pipeline   the full real-time search graph: dedispersion -> fdas ->
+             harmonic sum -> sift, with per-stage DVFS planning
 
 The search workload of White, Adámek & Armour (2022): the FFT-heavy,
-DVFS-schedulable stage downstream of the paper's Sec. 5.3 pipeline.
+DVFS-schedulable pipeline downstream of the paper's Sec. 5.3 discussion.
 """
 from repro.search.fdas import (Candidates, FDASResult, extract_candidates,
                                fdas_conv_plan, fdas_search,
                                matched_filter_plane, power_plane,
                                serving_candidates)
+from repro.search.pipeline import (DispersionPlan, PulsarSearchResult,
+                                   PulsarStagePlan, plan_pulsar_stages,
+                                   pulsar_search, serving_sifted)
+from repro.search.sift import SiftedCandidates, sift_candidates
 from repro.search.templates import (TemplateBank, acceleration_response,
                                     matched_filter_taps)
 
 __all__ = [
-    "Candidates", "FDASResult", "TemplateBank", "acceleration_response",
-    "extract_candidates", "fdas_conv_plan", "fdas_search",
-    "matched_filter_plane", "matched_filter_taps", "power_plane",
-    "serving_candidates",
+    "Candidates", "DispersionPlan", "FDASResult", "PulsarSearchResult",
+    "PulsarStagePlan", "SiftedCandidates", "TemplateBank",
+    "acceleration_response", "extract_candidates", "fdas_conv_plan",
+    "fdas_search", "matched_filter_plane", "matched_filter_taps",
+    "plan_pulsar_stages", "power_plane", "pulsar_search",
+    "serving_candidates", "serving_sifted", "sift_candidates",
 ]

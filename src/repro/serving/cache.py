@@ -16,17 +16,16 @@ operating point from the cached sweep without re-sweeping.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable
 
 import jax
 
 from repro.core import dvfs
-from repro.core.energy import OperatingPoint, ffts_per_batch
+from repro.core.energy import OperatingPoint
 from repro.core.hardware import DeviceSpec
 from repro.core.perf_model import WorkloadProfile
 from repro.core.power_model import PowerModel
-from repro.core.workloads import COMPLEX_BYTES, FFTCase, fft_workload
+from repro.core.workloads import FFTCase, fft_workload
 from repro.fft.plan import FFTPlan, plan_for_length
 from repro.serving.request import KIND_FDAS, KIND_PULSAR, ShapeKey
 
@@ -49,11 +48,17 @@ class CacheEntry:
     """Everything the executor needs for one shape."""
 
     key: ShapeKey
-    plan: FFTPlan | Any | None  # NDPlan for N-D; None for pulsar requests
+    plan: FFTPlan | Any | None  # NDPlan for N-D; DispersionPlan for pulsar
     fn: Callable                # jitted executable for the shape
     profile: WorkloadProfile    # analytic workload model of one full batch
     sweep: dvfs.SweepResult     # full clock-grid sweep for ``profile``
     n_fft_model: int            # transforms the modelled batch contains
+    # Pulsar-pipeline entries only: the per-stage DVFS plan (clock +
+    # modelled J per stage, scheduler.PipelineReport), the locked clocks
+    # and the end-to-end real-time margin at those clocks.
+    stages: Any | None = None
+    locked: dict | None = None
+    realtime_margin: float | None = None
 
     def point_for(self, time_budget: float | None) -> OperatingPoint:
         """Operating point under a real-time budget — from cached points."""
@@ -120,7 +125,19 @@ class PlanSweepCache:
             return plan_config((key.n // 2 + 1, bank.taps, key.templates),
                                "conv")
         if key.kind == KIND_PULSAR:
-            return plan_config((key.n,), key.transform)
+            # The pipeline's tunable inner passes: the R2C over the
+            # dedispersed series (length = the filterbank's time axis)
+            # and the overlap-save conv against the acceleration bank.
+            # Keying on BOTH means a re-tune of either — or a DM-grid /
+            # bank change (already in the ShapeKey) — rebuilds the entry.
+            from repro.search.templates import TemplateBank
+            ntime = key.shape[-1] if key.shape else key.n
+            bank = TemplateBank.linear(
+                zmax=max((key.templates - 1) / 2.0, 0.0),
+                n_templates=key.templates)
+            return (plan_config((ntime,), "r2c"),
+                    plan_config((ntime // 2 + 1, bank.taps, key.templates),
+                                "conv"))
         return plan_config(key.shape or (key.n,), key.transform)
 
     def entry(self, key: ShapeKey) -> CacheEntry:
@@ -135,8 +152,9 @@ class PlanSweepCache:
         return entry
 
     def _build(self, key: ShapeKey) -> CacheEntry:
+        extras: dict = {}
         if key.kind == KIND_PULSAR:
-            plan, fn, profile, n_fft = self._build_pulsar(key)
+            plan, fn, profile, n_fft, extras = self._build_pulsar(key)
         elif key.kind == KIND_FDAS:
             plan, fn, profile, n_fft = self._build_fdas(key)
         else:
@@ -144,7 +162,7 @@ class PlanSweepCache:
         self.stats.sweeps += 1
         sweep = self._sweep_fn(profile, self.device, self._power_model)
         return CacheEntry(key=key, plan=plan, fn=fn, profile=profile,
-                          sweep=sweep, n_fft_model=n_fft)
+                          sweep=sweep, n_fft_model=n_fft, **extras)
 
     def _build_fft(self, key: ShapeKey):
         self.stats.plan_builds += 1
@@ -169,15 +187,46 @@ class PlanSweepCache:
         return plan, fn, profile, case.n_fft
 
     def _build_pulsar(self, key: ShapeKey):
-        from repro.fft.pipeline import (PipelineShape, pulsar_pipeline,
-                                        total_profile)
-        n_fft = ffts_per_batch(self.batch_bytes, key.n,
-                               COMPLEX_BYTES[key.precision])
-        shape = PipelineShape(batch=n_fft, n=key.n,
-                              n_harmonics=key.n_harmonics)
-        profile = total_profile(shape, self.device)
-        fn = functools.partial(pulsar_pipeline, n_harmonics=key.n_harmonics)
-        return None, fn, profile, n_fft
+        """Pulsar-pipeline entries: the full search graph (dedispersion ->
+        FDAS -> harmonic sum -> sift) with a per-stage clock plan.
+
+        The entry's canonical geometry comes from the ShapeKey alone —
+        a default FilterbankSpec at the key's (nchan, ntime), the
+        default DM grid at ``dm_trials``, the linear bank at
+        ``templates`` — so identical submissions always share one
+        compiled graph and one set of sweeps.  The merged four-stage
+        profile feeds the entry-level sweep (single-clock serving);
+        ``plan_pulsar_stages`` prices the per-stage locks the receipts
+        report.
+        """
+        from repro.data.synthetic import FilterbankSpec
+        from repro.search.pipeline import (DispersionPlan,
+                                           plan_pulsar_stages,
+                                           pulsar_search, serving_sifted)
+        from repro.search.templates import TemplateBank
+        self.stats.plan_builds += 1
+        if len(key.shape) != 2:
+            raise ValueError(
+                f"pulsar keys need a (nchan, ntime) shape, got {key.shape}")
+        nchan, ntime = key.shape
+        spec = FilterbankSpec(nchan=nchan, ntime=ntime)
+        dplan = DispersionPlan.from_spec(spec, n_trials=key.dm_trials)
+        bank = TemplateBank.linear(
+            zmax=max((key.templates - 1) / 2.0, 0.0),
+            n_templates=key.templates)
+        stage_plan = plan_pulsar_stages(
+            spec, dplan, bank, key.n_harmonics, self.device,
+            batch_bytes=self.batch_bytes, power_model=self._power_model,
+            sweep_fn=self._sweep_fn)
+
+        def fn(x, _plan=dplan, _bank=bank, _h=key.n_harmonics):
+            return serving_sifted(
+                pulsar_search(x, _plan, _bank, n_harmonics=_h))
+
+        extras = {"stages": stage_plan.report, "locked": stage_plan.locked,
+                  "realtime_margin": stage_plan.realtime_margin}
+        return (dplan, fn, stage_plan.total_profile,
+                stage_plan.case.n_rows, extras)
 
     def _build_fdas(self, key: ShapeKey):
         """Acceleration-search entries: one template bank, one overlap-save

@@ -17,7 +17,7 @@ _REQUEST_IDS = itertools.count()
 
 #: Request kinds the service understands.
 KIND_FFT = "fft"            # batched 1-D C2C transform (the paper's workload)
-KIND_PULSAR = "pulsar"      # full Sec. 5.3 pulsar-search pipeline
+KIND_PULSAR = "pulsar"      # end-to-end pulsar search (repro.search.pipeline)
 KIND_FDAS = "fdas"          # Fourier-domain acceleration search (repro.search)
 
 
@@ -43,8 +43,9 @@ class ShapeKey:
     device: str = ""
     transform: str = "c2c"          # "c2c" | "r2c" — distinct plans + sweeps
     shape: tuple[int, ...] = ()     # N-D transform-axes lengths; () for 1-D
-    templates: int = 0              # fdas requests: acceleration-bank size
+    templates: int = 0              # fdas/pulsar: acceleration-bank size
     segment: int = 0                # fdas: overlap-save nfft (0 = auto)
+    dm_trials: int = 0              # pulsar: dedispersion DM-grid size
 
     @property
     def last_axis(self) -> int:
@@ -59,10 +60,14 @@ class ShapeKey:
         complex footprint, so Eq. 6 fits twice as many per batch.  Non-pow2
         r2c falls back to the full C2C algorithm (repro.fft.plan), so it
         pays complex bytes and must be capped accordingly.  N-D payloads
-        pack along the last transform axis.  Must stay in lockstep with
-        ``core.workloads.FFTCase.elem_bytes`` (the cost-model twin).
+        pack along the last transform axis.  Pulsar filterbanks are real
+        samples regardless of length.  Must stay in lockstep with
+        ``core.workloads.FFTCase.elem_bytes`` /
+        ``core.workloads.PulsarCase.sample_bytes`` (the cost-model twins).
         """
         full = COMPLEX_BYTES[self.precision]
+        if self.kind == KIND_PULSAR:
+            return full // 2
         if self.transform == "r2c" and is_pow2(self.last_axis):
             return full // 2
         return full
@@ -85,8 +90,9 @@ class FFTRequest:
     n_harmonics: int = 32                # pulsar kind only
     transform: str = "c2c"               # "c2c" or "r2c" (real payloads)
     ndim: int = 1                        # transform rank (2 for fft2 jobs)
-    templates: int = 16                  # fdas kind only: bank size
+    templates: int = 16                  # fdas/pulsar: bank size
     segment: int = 0                     # fdas kind only: nfft (0 = auto)
+    dm_trials: int = 16                  # pulsar kind only: DM-grid size
     request_id: int = dataclasses.field(
         default_factory=lambda: next(_REQUEST_IDS))
     t_enqueue: float = 0.0               # stamped by the service
@@ -98,15 +104,24 @@ class FFTRequest:
                 f"have {sorted(COMPLEX_BYTES)}")
         if self.kind not in (KIND_FFT, KIND_PULSAR, KIND_FDAS):
             raise ValueError(f"unknown request kind {self.kind!r}")
-        if self.kind == KIND_FDAS and self.templates < 1:
+        if self.kind in (KIND_FDAS, KIND_PULSAR) and self.templates < 1:
             raise ValueError(
-                f"fdas requests need templates >= 1, got {self.templates}")
+                f"{self.kind} requests need templates >= 1, "
+                f"got {self.templates}")
         if self.transform not in ("c2c", "r2c"):
             raise ValueError(f"unknown transform {self.transform!r}; "
                              "have ('c2c', 'r2c')")
+        if self.kind == KIND_PULSAR:
+            # Pulsar payloads are rank-2 filterbanks (nchan, ntime); the
+            # transform rank is implied, not caller-chosen.
+            if self.dm_trials < 1:
+                raise ValueError(
+                    f"pulsar requests need dm_trials >= 1, "
+                    f"got {self.dm_trials}")
+            self.ndim = 2
         if self.ndim < 1:
             raise ValueError(f"transform rank must be >= 1, got {self.ndim}")
-        if self.ndim > 1 and self.kind != KIND_FFT:
+        if self.ndim > 1 and self.kind not in (KIND_FFT, KIND_PULSAR):
             raise ValueError("N-D payloads are FFT requests only")
         # Reject malformed payloads at submit time so one bad request can
         # never poison a whole serving cycle.
@@ -149,15 +164,33 @@ class FFTRequest:
 
     def shape_key(self, device_name: str) -> ShapeKey:
         """FDAS keys carry (n, segment, templates): distinct banks or
-        segment lengths compile distinct plans and sweep separately."""
+        segment lengths compile distinct plans and sweep separately.
+        Pulsar keys carry the full pipeline configuration — filterbank
+        shape, DM-grid size, bank size, harmonic count — so any change
+        plans, compiles and sweeps its own entry (the inner R2C is
+        pinned via ``transform`` for the tuned-config key)."""
         fdas = self.kind == KIND_FDAS
+        pulsar = self.kind == KIND_PULSAR
         return ShapeKey(
             kind=self.kind, n=self.n, precision=self.precision,
-            n_harmonics=self.n_harmonics if self.kind == KIND_PULSAR else 0,
-            device=device_name, transform=self.transform,
+            n_harmonics=self.n_harmonics if pulsar else 0,
+            device=device_name,
+            transform="r2c" if pulsar else self.transform,
             shape=self.shape if self.ndim > 1 else (),
-            templates=self.templates if fdas else 0,
-            segment=self.segment if fdas else 0)
+            templates=self.templates if (fdas or pulsar) else 0,
+            segment=self.segment if fdas else 0,
+            dm_trials=self.dm_trials if pulsar else 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class StageReceipt:
+    """One pipeline stage's share of a request: the clock the per-stage
+    DVFS plan locks it to and its modelled time/energy share."""
+
+    name: str                   # "dedisp" | "fdas" | "harmonic-sum" | "sift"
+    clock_mhz: float            # the stage's locked clock
+    time_s: float               # modelled stage time of this share
+    energy_j: float             # modelled stage energy of this share
 
 
 @dataclasses.dataclass
@@ -176,6 +209,9 @@ class RequestReceipt:
     energy_j: float             # model-predicted energy of this share
     boost_energy_j: float       # same share executed at the boost clock
     result: Any = None          # transform output (None if not retained)
+    # --- pulsar-pipeline requests only -----------------------------------
+    stages: list[StageReceipt] | None = None   # per-stage clock + J shares
+    realtime_margin: float | None = None       # S = t_acquire / t_process
 
     @property
     def latency(self) -> float:

@@ -37,7 +37,7 @@ from repro.serving.batcher import Batch, coalesce
 from repro.serving.cache import CacheStats, PlanSweepCache
 from repro.serving.dispatch import Dispatcher
 from repro.serving.request import (KIND_FFT, KIND_PULSAR, FFTRequest,
-                                   RequestReceipt)
+                                   RequestReceipt, StageReceipt)
 
 _EXEC_DTYPE = {"fp16": jnp.complex64, "fp32": jnp.complex64,
                "fp64": jnp.complex128}
@@ -157,6 +157,7 @@ class FFTService:
         ndim: int = 1,
         templates: int = 16,
         segment: int = 0,
+        dm_trials: int = 16,
     ) -> FFTRequest:
         """Enqueue one request (a (batch, *shape) or (*shape,) array).
 
@@ -168,14 +169,20 @@ class FFTService:
         the full acceleration search (repro.search) on real time series;
         ``templates`` sizes the bank and ``segment`` pins the
         overlap-save FFT length (0 = cost-model auto-selection), and both
-        are part of the plan/sweep cache key.  The request's receipt
-        becomes available after the next drain():
+        are part of the plan/sweep cache key.  ``kind="pulsar"`` runs the
+        end-to-end pulsar search (repro.search.pipeline) on (nchan,
+        ntime) filterbanks — ``dm_trials`` sizes the dedispersion grid,
+        ``templates``/``n_harmonics`` the bank and harmonic ladder, and
+        all three join the cache key; its receipts carry per-stage DVFS
+        shares (clock, modelled J) and the real-time margin.  The
+        request's receipt becomes available after the next drain():
         ``service.receipt(request)``.
         """
         req = FFTRequest(x=jnp.asarray(x), precision=precision, kind=kind,
                          latency_budget=latency_budget,
                          n_harmonics=n_harmonics, transform=transform,
-                         ndim=ndim, templates=templates, segment=segment)
+                         ndim=ndim, templates=templates, segment=segment,
+                         dm_trials=dm_trials)
         req.t_enqueue = self._timer()
         self._pending.append(req)
         return req
@@ -291,6 +298,15 @@ class FFTService:
             if (self.max_retained_receipts is not None
                     and len(self._receipts) >= self.max_retained_receipts):
                 self._receipts.pop(next(iter(self._receipts)))  # oldest
+            stages = None
+            if entry.stages is not None:
+                # Pipeline entries: scale the modelled batch's per-stage
+                # plan (clock + J/stage) to this request's row share.
+                share = rows / max(entry.n_fft_model, 1)
+                stages = [StageReceipt(name=s.name, clock_mhz=s.f,
+                                       time_s=s.time * share,
+                                       energy_j=s.energy * share)
+                          for s in entry.stages.stages]
             self._receipts[req.request_id] = RequestReceipt(
                 request=req,
                 batch_id=batch.batch_id,
@@ -302,6 +318,8 @@ class FFTService:
                 energy_j=per_energy * rows,
                 boost_energy_j=per_boost * rows,
                 result=result,
+                stages=stages,
+                realtime_margin=entry.realtime_margin,
             )
 
     # ------------------------------------------------------------------ #

@@ -10,8 +10,10 @@ import pytest
 from repro.kernels.fft.ops import (MAX_KERNEL_N, fft_kernel_c2c,
                                    fft_kernel_c2r, fft_kernel_r2c)
 from repro.kernels.fft.ref import fft_ref, irfft_ref, rfft_ref
-from repro.kernels.harmonic_sum.ops import harmonic_sum_kernel
-from repro.kernels.harmonic_sum.ref import harmonic_sum_ref
+from repro.kernels.harmonic_sum.ops import (harmonic_sum_kernel,
+                                            harmonic_sum_plane)
+from repro.kernels.harmonic_sum.ref import (harmonic_sum_plane_ref,
+                                            harmonic_sum_ref)
 from repro.kernels.spectrum.ops import power_spectrum_stats_kernel
 from repro.kernels.spectrum.ref import power_spectrum_stats_ref
 
@@ -159,6 +161,67 @@ class TestHarmonicSumKernel:
         np.testing.assert_allclose(got, harmonic_sum_ref(p, 8), rtol=1e-5,
                                    atol=1e-5)
 
+    def test_single_harmonic_is_identity_ladder(self):
+        """n_harmonics=1: one ladder level that IS the input spectrum."""
+        p = jax.random.uniform(KEY, (3, 64), dtype=jnp.float32)
+        got = harmonic_sum_kernel(p, 1, interpret=True)
+        assert got.shape == (3, 1, 64)
+        np.testing.assert_allclose(got[:, 0], p, rtol=1e-6)
+
+
+class TestHarmonicSumPlane:
+    """The fused production variant: ladder + normalise + max-reduce in
+    VMEM, only the (..., N) statistic and int32 level leave the kernel."""
+
+    @pytest.mark.parametrize("n", [64, 1024])
+    @pytest.mark.parametrize("h", [1, 4, 32])
+    def test_matches_oracle(self, n, h):
+        p = jax.random.uniform(KEY, (5, n), dtype=jnp.float32) * 3.0
+        stat, lev = harmonic_sum_plane(p, h, interpret=True)
+        stat_r, lev_r = harmonic_sum_plane_ref(p, h)
+        assert stat.shape == lev.shape == (5, n)
+        assert lev.dtype == jnp.int32
+        np.testing.assert_allclose(stat, stat_r, rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(lev), np.asarray(lev_r))
+
+    def test_odd_length_non_divisible_batch(self):
+        """Odd N and a prime batch: tiling edges on both axes at once."""
+        p = jax.random.uniform(KEY, (11, 3, 129), dtype=jnp.float32)
+        stat, lev = harmonic_sum_plane(p, 8, interpret=True)
+        stat_r, lev_r = harmonic_sum_plane_ref(p, 8)
+        np.testing.assert_allclose(stat, stat_r, rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(lev), np.asarray(lev_r))
+
+    def test_single_harmonic_edge(self):
+        """n_harmonics=1: stat == P - 1 (z_1), level 0 everywhere."""
+        p = jax.random.uniform(KEY, (2, 64), dtype=jnp.float32)
+        stat, lev = harmonic_sum_plane(p, 1, interpret=True)
+        np.testing.assert_allclose(stat, p - 1.0, rtol=1e-6, atol=1e-6)
+        assert not np.asarray(lev).any()
+
+    def test_planted_harmonic_signal_picks_deep_level(self):
+        """Power split across harmonics k, 2k, 4k: summing the ladder to
+        level 2 collects all three, so level 2 must win at bin k."""
+        n, k = 256, 10
+        p = jnp.ones((1, n))
+        for m in (1, 2, 4):
+            p = p.at[0, m * k].add(30.0)
+        stat, lev = harmonic_sum_plane(p, 8, interpret=True)
+        assert int(lev[0, k]) == 2
+        assert int(jnp.argmax(stat[0])) == k
+
+    def test_agrees_with_demo_ladder(self):
+        """The fused plane must equal normalise+max over the demo ladder."""
+        p = jax.random.uniform(KEY, (4, 128), dtype=jnp.float32) * 2.0
+        ladder = harmonic_sum_kernel(p, 16, interpret=True)
+        hs = 2.0 ** jnp.arange(ladder.shape[-2])
+        z = (ladder - hs[:, None]) / jnp.sqrt(hs)[:, None]
+        stat, lev = harmonic_sum_plane(p, 16, interpret=True)
+        np.testing.assert_allclose(stat, z.max(axis=-2), rtol=1e-5,
+                                   atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(lev),
+                                      np.asarray(jnp.argmax(z, axis=-2)))
+
 
 class TestSpectrumKernel:
     @pytest.mark.parametrize("n", [64, 1024, 8192])
@@ -214,6 +277,21 @@ class TestKernelInputValidation:
     def test_harmonic_sum_rejects_empty_trailing_dim(self):
         with pytest.raises(ValueError, match="non-empty trailing"):
             harmonic_sum_kernel(jnp.ones((2, 0)), 8, interpret=True)
+        with pytest.raises(ValueError, match="non-empty trailing"):
+            harmonic_sum_plane(jnp.ones((2, 0)), 8, interpret=True)
+
+    def test_harmonic_sum_rejects_complex_power(self):
+        """Power planes are real (|X|**2); a complex spectrum here is an
+        upstream bug, not something to silently .real away."""
+        x = jnp.ones((2, 64), jnp.complex64)
+        with pytest.raises(ValueError, match="complex dtype"):
+            harmonic_sum_kernel(x, 8, interpret=True)
+        with pytest.raises(ValueError, match="complex dtype"):
+            harmonic_sum_plane(x, 8, interpret=True)
+
+    def test_harmonic_sum_plane_rejects_non_pow2_harmonics(self):
+        with pytest.raises(ValueError, match="power of two"):
+            harmonic_sum_plane(jnp.ones((2, 64)), 3, interpret=True)
 
     def test_spectrum_stats_rejects_empty_trailing_dim(self):
         with pytest.raises(ValueError, match="non-empty trailing"):

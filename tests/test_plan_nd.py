@@ -302,4 +302,4 @@ def test_request_rejects_bad_rank():
         FFTRequest(x=jnp.zeros((4, 4), jnp.complex64), ndim=3)
     with pytest.raises(ValueError):
         FFTRequest(x=jnp.zeros((2, 4, 4), jnp.complex64), ndim=2,
-                   kind="pulsar")
+                   kind="fdas")

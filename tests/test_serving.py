@@ -233,16 +233,38 @@ def test_service_r2c_requests_halve_energy():
 
 
 def test_service_pulsar_requests():
+    """KIND_PULSAR runs the full filterbank pipeline: the receipt's
+    result is the packed sifted-candidate array and the receipt carries
+    per-stage DVFS shares plus the real-time margin."""
+    from repro.data.synthetic import (FilterbankSpec, InjectedPulsar,
+                                      synthetic_filterbank)
+    from repro.search.pipeline import DispersionPlan
     svc = FFTService(TPU_V5E)
-    x = np.asarray(jax.random.normal(KEY, (2, 2048)), dtype=np.float32)
-    req = svc.submit(x, kind="pulsar", n_harmonics=8)
+    spec = FilterbankSpec(nchan=8, ntime=512)
+    plan = DispersionPlan.from_spec(spec, n_trials=4)
+    pulsar = InjectedPulsar(dm=plan.dms[2], k0=90, z=0.0, amp=0.4)
+    fb = synthetic_filterbank(spec, (pulsar,), noise=1.0, seed=0)
+    req = svc.submit(fb, kind="pulsar", n_harmonics=4, templates=5,
+                     dm_trials=4)
     svc.drain()
     r = svc.receipt(req)
-    assert r.result.shape == (2, 4, 2048)         # h = 1, 2, 4, 8 levels
-    from repro.fft.pipeline import pulsar_pipeline
-    np.testing.assert_allclose(np.asarray(r.result),
-                               np.asarray(pulsar_pipeline(jnp.asarray(x), 8)),
-                               rtol=1e-4, atol=1e-4)
+    # Packed candidates: (rows, k, 5) = (dm, template, bin, level, snr).
+    assert r.result.shape == (1, 16, 5)
+    top = np.asarray(r.result)[0, 0]
+    assert top[0] == 2                            # the injected DM trial
+    assert top[1] == 2                            # z=0 -> centre template
+    assert top[2] == 90                           # the injected bin
+    assert top[4] > 25.0
+    # Per-stage DVFS receipts for all four stages.
+    assert [s.name for s in r.stages] == ["dedisp", "fdas",
+                                          "harmonic-sum", "sift"]
+    assert all(s.clock_mhz > 0 and s.energy_j > 0 for s in r.stages)
+    assert r.realtime_margin is not None and r.realtime_margin > 0
+    # Plain FFT receipts carry no stage breakdown.
+    other = svc.submit(np.asarray(jax.random.normal(KEY, (2, 256)),
+                                  dtype=np.complex64))
+    svc.drain()
+    assert svc.receipt(other).stages is None
 
 
 def test_clock_controller_pairs_lock_and_reset():
