@@ -34,6 +34,13 @@ figure's headline quantity).
   roofline              the dry-run roofline table (artifacts)
   dvfs_cells            the paper's technique applied to every dry-run cell
   serving               the energy-aware FFT service on a synthetic stream
+  chaos                 deterministic chaos/load harness: a mixed
+                        fft/fft2/fdas/pulsar stream under an injected
+                        fault schedule (device kills, clock-lock
+                        failures, stalls) with SLO admission control —
+                        gates the every-request-gets-a-receipt invariant,
+                        availability and bit-reproducibility
+                        -> persists BENCH_chaos.json
 
 Usage: ``python benchmarks/run.py [target ...]`` — no arguments runs all.
 """
@@ -879,12 +886,222 @@ def serving():
          f"naive_batches={nrep.n_batches}")
 
 
+def _chaos_pool(seed):
+    """Deterministic payload pool, one array per distinct request shape.
+
+    Payloads are built once and resubmitted (the service never mutates
+    them), so 10^5 requests cost 10^5 receipt objects, not 10^5 arrays.
+    """
+    rng = np.random.default_rng(seed)
+
+    def cplx(shape):
+        return jnp.asarray((rng.standard_normal(shape)
+                            + 1j * rng.standard_normal(shape)
+                            ).astype(np.complex64))
+
+    def real(shape):
+        return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+    return {
+        "fft": {(n, b): cplx((b, n))
+                for n in (256, 512, 1024) for b in (1, 2, 3, 4)},
+        "r2c": {b: real((b, 512)) for b in (1, 2)},
+        "fft2": cplx((2, 64, 64)),
+        "fdas": real((1, 1024)),
+        "pulsar": real((4, 256)),
+    }
+
+
+def _chaos_submit(svc, i, pool):
+    """Submit request ``i`` of the deterministic mixed stream."""
+    if i % 997 == 111:
+        return svc.submit(pool["pulsar"], kind="pulsar", dm_trials=4,
+                          templates=3, n_harmonics=4)
+    if i % 211 == 23:
+        return svc.submit(pool["fdas"], kind="fdas", templates=3)
+    if i % 53 == 17:
+        return svc.submit(pool["fft2"], ndim=2)
+    if i % 7 == 3:
+        return svc.submit(pool["r2c"][1 + i % 2], transform="r2c")
+    return svc.submit(pool["fft"][((256, 512, 1024)[i % 3], 1 + i % 4)])
+
+
+def _run_chaos(n_requests, seed, *, wave=512, deadline_s=7e-6):
+    """One open-loop chaos run; returns (service, submitted, stats)."""
+    import hashlib
+    from repro.core.hardware import TPU_V5E
+    from repro.runtime.faults import (FAIL_CLOCK_LOCK, FAIL_PLAN_BUILD,
+                                      KILL_DEVICE, STALL_WORKER, FaultPlan)
+    from repro.serving import SLO, FFTService, SLOPolicy, rung_name
+
+    pool = _chaos_pool(seed)
+    # ~7 distinct shapes coalesce to ~7 batches per wave; double it so the
+    # generated schedule covers every batch id the run can reach.
+    n_batches = max(2 * 8 * (n_requests // wave + 1), 16)
+    plan = FaultPlan.generate(seed, n_batches=n_batches,
+                              stall_duration_s=0.02)
+    policy = SLOPolicy(default=SLO(deadline_s=deadline_s))
+    svc = FFTService(TPU_V5E, keep_results=False, slo=policy,
+                     fault_plan=plan, drain_deadline_s=300.0)
+    submitted = []
+    t0 = time.perf_counter()
+    for start in range(0, n_requests, wave):
+        for i in range(start, min(start + wave, n_requests)):
+            submitted.append(_chaos_submit(svc, i, pool))
+        svc.drain()
+    wall = time.perf_counter() - t0
+
+    receipts = [svc.receipt(r) for r in submitted]
+    missing = sum(1 for r in receipts if r is None)
+    # The reproducibility digest covers request-visible *outcomes* only:
+    # worker placement and measured latencies are wall-clock-dependent,
+    # the (outcome, rung, reason) trajectory must not be.
+    h = hashlib.blake2b(digest_size=16)
+    for req, r in zip(submitted, receipts):
+        h.update(f"{req.kind}:{r.outcome}:{r.rung}:{r.reason}".encode()
+                 if r is not None else b"MISSING")
+    rep = svc.report()
+
+    served = [r for r in receipts if r is not None and r.status == "served"]
+    shed = [r for r in receipts if r is not None and r.status == "shed"]
+    lat = np.array([r.latency for r in served]) if served else np.zeros(1)
+    by_rung = {}
+    for r in served:
+        g = by_rung.setdefault(rung_name(r.rung),
+                               {"n": 0, "transforms": 0, "energy_j": 0.0})
+        g["n"] += 1
+        g["transforms"] += r.request.batch
+        g["energy_j"] += r.energy_j
+    for g in by_rung.values():
+        g["j_per_transform"] = g["energy_j"] / max(g["transforms"], 1)
+
+    stats = {
+        "n_requests": n_requests,
+        "n_workers": svc.dispatcher.queue.n_workers,
+        "wave": wave,
+        "seed": seed,
+        "wall_s": wall,
+        "requests_per_s": n_requests / wall,
+        "missing_receipts": missing,
+        "outcomes": {
+            "served": sum(1 for r in served if r.retries == 0),
+            "retried": sum(1 for r in served if r.retries > 0),
+            "shed": len(shed),
+        },
+        "shed_by_reason": {
+            reason: sum(1 for r in shed if r.reason == reason)
+            for reason in sorted({r.reason for r in shed})
+        },
+        "shed_rate": len(shed) / max(n_requests, 1),
+        "availability": rep.availability,
+        "p50_latency_s": float(np.percentile(lat, 50)),
+        "p99_latency_s": float(np.percentile(lat, 99)),
+        "j_per_transform_by_rung": by_rung,
+        "faults_fired": {k: plan.fired_count(k)
+                         for k in (KILL_DEVICE, FAIL_CLOCK_LOCK,
+                                   FAIL_PLAN_BUILD, STALL_WORKER)},
+        "faults_pending": plan.pending(),
+        "breaker_opens": rep.breaker_opens,
+        "redistributions": rep.redistributions,
+        "steals": rep.steals,
+        "degraded": rep.degraded,
+        "admission": {"admitted": svc.admission.admitted,
+                      "degraded": svc.admission.degraded,
+                      "shed": svc.admission.shed},
+        "digest": h.hexdigest(),
+    }
+    return svc, stats
+
+
+def chaos():
+    """Deterministic chaos/load harness — persists BENCH_chaos.json.
+
+    Drives REPRO_CHAOS_REQUESTS (default 100000) mixed
+    fft/fft2/fdas/pulsar requests through the SLO-governed service under
+    a seed-generated fault schedule (>= 1 device kill, >= 1 clock-lock
+    failure, >= 1 stalled worker), then re-runs a smaller stream twice to
+    prove outcome bit-reproducibility.  Run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a
+    simulated 8-device fleet.
+
+    Self-checked acceptance (CI gates on a non-zero exit):
+      * every submitted request terminates in exactly one receipt;
+      * the fault plan was non-trivial AND every pinned kind fired;
+      * availability >= 0.99 excluding admission sheds;
+      * the same seed reproduces the same outcome digest.
+    """
+    from repro.runtime.faults import (FAIL_CLOCK_LOCK, KILL_DEVICE,
+                                      STALL_WORKER)
+
+    n_requests = int(os.environ.get("REPRO_CHAOS_REQUESTS", "100000"))
+    seed = int(os.environ.get("REPRO_CHAOS_SEED", "0"))
+    # The SLO deadline is in *modelled* boost-clock seconds (the admission
+    # controller never reads the wall clock); ~7us of modelled TPU work per
+    # wave puts the mixed stream right at the degrade/shed knee.
+    deadline_s = float(os.environ.get("REPRO_CHAOS_DEADLINE_S", "7e-6"))
+    svc, stats = _run_chaos(n_requests, seed, deadline_s=deadline_s)
+    _row("chaos_stream", stats["wall_s"] / max(n_requests, 1) * 1e6,
+         f"workers={stats['n_workers']};rps={stats['requests_per_s']:.0f};"
+         f"served={stats['outcomes']['served']};"
+         f"retried={stats['outcomes']['retried']};"
+         f"shed={stats['outcomes']['shed']};"
+         f"availability={stats['availability']:.4f}")
+    _row("chaos_faults", 0.0,
+         f"fired={stats['faults_fired']};breaker_opens="
+         f"{stats['breaker_opens']};redistributions="
+         f"{stats['redistributions']}")
+
+    # Bit-reproducibility: two fresh services, same seed, same (smaller)
+    # stream — identical outcome digests.
+    n_sub = min(n_requests, int(os.environ.get(
+        "REPRO_CHAOS_REPRO_REQUESTS", "2000")))
+    _, sub_a = _run_chaos(n_sub, seed, deadline_s=deadline_s)
+    _, sub_b = _run_chaos(n_sub, seed, deadline_s=deadline_s)
+    reproducible = sub_a["digest"] == sub_b["digest"]
+    _row("chaos_repro", 0.0,
+         f"n={n_sub};digest_a={sub_a['digest'][:16]};"
+         f"digest_b={sub_b['digest'][:16]};match={reproducible}")
+
+    fired = stats["faults_fired"]
+    criteria = {
+        # Acceptance: every request terminates in exactly one receipt.
+        "missing_receipts": stats["missing_receipts"],
+        "every_request_receipted": stats["missing_receipts"] == 0,
+        # Acceptance: the schedule was non-trivial and actually fired.
+        "nontrivial_fault_plan": (fired[KILL_DEVICE] >= 1
+                                  and fired[FAIL_CLOCK_LOCK] >= 1
+                                  and fired[STALL_WORKER] >= 1),
+        # Acceptance: availability (excluding admission sheds) >= 99%.
+        "availability": stats["availability"],
+        "availability_ok": stats["availability"] >= 0.99,
+        # Acceptance: same seed => same outcome trajectory.
+        "reproducible": reproducible,
+    }
+    out = {
+        "backend": jax.default_backend(),
+        "criteria": criteria,
+        "run": stats,
+        "repro_runs": [sub_a, sub_b],
+    }
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_chaos.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    _row("chaos_bench_json", 0.0,
+         f"written={os.path.abspath(path)};"
+         f"availability={stats['availability']:.4f};"
+         f"reproducible={reproducible}")
+    if not (criteria["every_request_receipted"]
+            and criteria["nontrivial_fault_plan"]
+            and criteria["availability_ok"] and reproducible):
+        raise SystemExit(f"chaos self-check failed: {criteria}")
+
+
 BENCHES = [fig4_exec_time, fig6_time_vs_freq, fig7_energy_u_shape,
            fig8_power_vs_freq, fig9_optimal_freq, table3_mean_optimal,
            fig10_gflops_per_watt, fig11_exec_increase, fig13_16_ief,
            table4_pipeline, kernels, fft, fft2, fdas, tune, pipeline,
            roofline, dvfs_cells, fft_pencil_roofline, conclusions_cost_co2,
-           serving]
+           serving, chaos]
 
 
 def main(argv: list[str] | None = None) -> None:

@@ -36,6 +36,7 @@ pipeline builds never re-materialise them; the serving layer's
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import math
@@ -86,6 +87,25 @@ except Exception:                                     # pragma: no cover
 
 def _pallas_enabled() -> bool:
     return os.environ.get("REPRO_FFT_DISABLE_PALLAS", "") not in ("1", "true")
+
+
+@contextlib.contextmanager
+def pallas_disabled():
+    """Force the pure-JAX engine inside the block (tracing included).
+
+    The serving layer's bottom degradation rung traces its fallback
+    executables under this, so they capture the ``REPRO_FFT_DISABLE_PALLAS``
+    path permanently regardless of the ambient environment.
+    """
+    prev = os.environ.get("REPRO_FFT_DISABLE_PALLAS")
+    os.environ["REPRO_FFT_DISABLE_PALLAS"] = "1"
+    try:
+        yield
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_FFT_DISABLE_PALLAS", None)
+        else:
+            os.environ["REPRO_FFT_DISABLE_PALLAS"] = prev
 
 
 def _kernel_overrides(config: KernelConfig | None) -> dict:

@@ -115,6 +115,16 @@ def plan_nd(shape: tuple[int, ...], kind: str = "c2c") -> NDPlan:
     return _plan_nd(shape, kind, _tuned_plan_config(shape, kind))
 
 
+def plan_nd_with_config(shape: tuple[int, ...], kind: str = "c2c",
+                        config=None) -> NDPlan:
+    """The plan graph for an *explicit* config, bypassing the tuning
+    context — ``config=None`` is the pure heuristic graph (what the
+    serving layer's degraded boost-heuristic rung executes)."""
+    if config is not None and config.is_heuristic:
+        config = None
+    return _plan_nd(tuple(shape), kind, config)
+
+
 @functools.lru_cache(maxsize=None)
 def _plan_nd(shape: tuple[int, ...], kind: str,
              config: KernelConfig | None = None) -> NDPlan:

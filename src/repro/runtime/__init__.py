@@ -1,7 +1,19 @@
 from repro.runtime.checkpoint import CheckpointManager
-from repro.runtime.fault import FaultTolerantDriver, SimulatedFailure
+from repro.runtime.fault import (FaultTolerantDriver, SimulatedFailure,
+                                 StragglerMonitor)
+from repro.runtime.faults import (FAIL_CLOCK_LOCK, FAIL_PLAN_BUILD,
+                                  KILL_DEVICE, STALL_WORKER, CircuitBreaker,
+                                  ClockLockError, DeviceLostError,
+                                  DrainDeadlineError, FaultError, FaultEvent,
+                                  FaultPlan, PlanBuildError, RetryPolicy,
+                                  WorkerStalledError)
 from repro.runtime.elastic import elastic_remesh_plan
 from repro.runtime.workqueue import WorkStealingQueue
 
-__all__ = ["CheckpointManager", "FaultTolerantDriver", "SimulatedFailure",
-           "elastic_remesh_plan", "WorkStealingQueue"]
+__all__ = ["CheckpointManager", "CircuitBreaker", "ClockLockError",
+           "DeviceLostError", "DrainDeadlineError", "FAIL_CLOCK_LOCK",
+           "FAIL_PLAN_BUILD", "FaultError", "FaultEvent", "FaultPlan",
+           "FaultTolerantDriver", "KILL_DEVICE", "PlanBuildError",
+           "RetryPolicy", "STALL_WORKER", "SimulatedFailure",
+           "StragglerMonitor", "WorkerStalledError", "elastic_remesh_plan",
+           "WorkStealingQueue"]

@@ -33,6 +33,7 @@ class StragglerMonitor:
     n_hosts: int
     factor: float = 1.5
     alpha: float = 0.3
+    shards_per_host: int = 1
 
     def __post_init__(self):
         self.ewma = np.zeros(self.n_hosts)
@@ -50,18 +51,27 @@ class StragglerMonitor:
                          ) -> dict[int, list[int]]:
         """Deterministic shard->host map with stragglers' load halved.
 
-        Shards of flagged hosts are split: half stays (the straggler is
-        slow, not dead), half moves to the fastest host this step.
+        Host ``h`` owns shards ``[h * shards_per_host, (h+1) *
+        shards_per_host)``.  Shards of flagged hosts are split
+        half-and-half: the straggler keeps the first ceil(half) (it is
+        slow, not dead) and the fastest *non-flagged* host this step takes
+        the rest.  The map is a pure function of (EWMA state, excluded),
+        so every host computes the same reassignment with no coordination.
         """
-        active = list(range(self.n_hosts))
-        assign = {h: [h] for h in active}
+        spH = self.shards_per_host
+        assign = {h: [h * spH + i for i in range(spH)]
+                  for h in range(self.n_hosts)}
         if not excluded:
             return assign
-        fastest = int(np.argmin(self.ewma))
+        healthy = [h for h in range(self.n_hosts) if h not in excluded]
+        if not healthy:
+            return assign                 # everyone is slow: nobody to help
+        fastest = min(healthy, key=lambda h: (self.ewma[h], h))
         for h in excluded:
-            if h != fastest and (step + h) % 2 == 0:
-                assign[fastest].append(h)
-                assign[h] = []
+            shards = assign[h]
+            keep = len(shards) - len(shards) // 2
+            assign[h], moved = shards[:keep], shards[keep:]
+            assign[fastest] = assign[fastest] + moved
         return assign
 
 
@@ -106,6 +116,9 @@ class FaultTolerantDriver:
                     step = latest
                 else:
                     step = start_step
+                # Drop metrics from rolled-back steps: they re-run after
+                # the restore, and each step must appear exactly once.
+                metrics_log = [m for m in metrics_log if m["step"] < step]
         # final checkpoint
         self.ckpt.save(step, self.state)
         return self.state, metrics_log, restarts

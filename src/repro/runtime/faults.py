@@ -1,0 +1,294 @@
+"""Serving-side fault-injection plane: deterministic fault plans,
+per-device circuit breakers and jittered-backoff retry policies.
+
+``repro.runtime.fault`` injects *training-loop* failures by step index
+(:class:`SimulatedFailure`).  This module generalises the idea for the
+serving runtime: a :class:`FaultPlan` is a deterministic, seed-generated
+schedule of one-shot fault events keyed on the serving layer's own
+deterministic identifiers (batch ids, worker slots) —
+
+  kill-device       the device executing a batch dies mid-batch
+  fail-clock-lock   the DVFS lock acquisition (ClockController.locked)
+                    fails; the batch must degrade to boost, not crash
+  fail-plan-build   the tuned plan/sweep build for a shape fails; the
+                    service walks down the degradation ladder
+  stall-worker      a worker wedges for ``duration`` seconds; its queued
+                    work must be redistributed
+
+Because events are keyed on batch ids (assigned in deterministic FIFO
+order by ``FFTService.drain``) rather than wall-clock time, a chaos run
+with the same fault-plan seed reproduces the exact same set of
+kill/degrade/shed outcomes — the bit-reproducibility the chaos benchmark
+gates on.  On real hardware the same exception types are raised by the
+XLA device runtime / NVML instead of the plan; everything downstream
+(breakers, retries, the degradation ladder) is identical.
+
+Barbosa et al. (2016) frame SKA power management as a *monitored,
+failure-aware control problem*; the circuit breaker here is that control
+loop's actuator: a device that keeps failing is quarantined (open), then
+probed after a cooldown (half-open) and re-admitted only on a successful
+probe (closed).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import numpy as np
+
+from repro.runtime.fault import SimulatedFailure
+
+#: Fault kinds a plan can schedule.
+KILL_DEVICE = "kill-device"
+FAIL_CLOCK_LOCK = "fail-clock-lock"
+FAIL_PLAN_BUILD = "fail-plan-build"
+STALL_WORKER = "stall-worker"
+
+FAULT_KINDS = (KILL_DEVICE, FAIL_CLOCK_LOCK, FAIL_PLAN_BUILD, STALL_WORKER)
+
+
+class FaultError(SimulatedFailure):
+    """Base class for injected serving faults (a SimulatedFailure kin)."""
+
+
+class DeviceLostError(FaultError):
+    """The device executing a batch died mid-batch."""
+
+    def __init__(self, worker: int, detail: str = ""):
+        self.worker = worker
+        super().__init__(f"device behind worker {worker} lost{detail}")
+
+
+class ClockLockError(FaultError):
+    """The DVFS clock-lock acquisition failed (NVML/driver error)."""
+
+
+class PlanBuildError(FaultError):
+    """A plan or sweep build failed for a shape."""
+
+
+class WorkerStalledError(FaultError):
+    """A worker is wedged; its queued work needs redistribution."""
+
+    def __init__(self, worker: int, duration: float):
+        self.worker = worker
+        self.duration = duration
+        super().__init__(f"worker {worker} stalled for {duration:g}s")
+
+
+class DrainDeadlineError(RuntimeError):
+    """drain() exceeded its deadline with work still stuck in queues.
+
+    ``stuck`` names the shape keys of the batches that never executed —
+    the first one is the batch a wedged worker is sitting on.
+    """
+
+    def __init__(self, deadline_s: float, stuck: list):
+        self.deadline_s = deadline_s
+        self.stuck = list(stuck)
+        first = self.stuck[0] if self.stuck else None
+        super().__init__(
+            f"drain() exceeded its {deadline_s:g}s deadline with "
+            f"{len(self.stuck)} batch(es) stuck; first stuck shape: {first}")
+
+
+@dataclasses.dataclass
+class FaultEvent:
+    """One scheduled one-shot fault.
+
+    ``batch_id``/``worker`` are match constraints: a ``None`` field
+    matches anything.  ``duration`` only applies to stalls.
+    """
+
+    kind: str
+    batch_id: int | None = None
+    worker: int | None = None
+    duration: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; have {FAULT_KINDS}")
+
+    def matches(self, batch_id: int | None, worker: int | None) -> bool:
+        if self.batch_id is not None and self.batch_id != batch_id:
+            return False
+        if self.worker is not None and self.worker != worker:
+            return False
+        return True
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """A deterministic schedule of one-shot fault events.
+
+    ``take(kind, ...)`` pops (and returns) the first still-pending event
+    of ``kind`` matching the given identifiers, or None — so each event
+    fires exactly once, in a deterministic order.  ``fired`` keeps the
+    consumed events for receipts/diagnostics.
+    """
+
+    events: list[FaultEvent] = dataclasses.field(default_factory=list)
+    seed: int | None = None
+
+    def __post_init__(self):
+        self.fired: list[FaultEvent] = []
+
+    def take(self, kind: str, *, batch_id: int | None = None,
+             worker: int | None = None) -> FaultEvent | None:
+        for i, ev in enumerate(self.events):
+            if ev.kind == kind and ev.matches(batch_id, worker):
+                self.fired.append(self.events.pop(i))
+                return self.fired[-1]
+        return None
+
+    def pending(self, kind: str | None = None) -> int:
+        return sum(1 for ev in self.events
+                   if kind is None or ev.kind == kind)
+
+    def fired_count(self, kind: str | None = None) -> int:
+        return sum(1 for ev in self.fired
+                   if kind is None or ev.kind == kind)
+
+    @classmethod
+    def generate(
+        cls,
+        seed: int,
+        *,
+        n_batches: int,
+        kill_rate: float = 0.01,
+        clock_fail_rate: float = 0.01,
+        plan_fail_rate: float = 0.005,
+        stall_rate: float = 0.005,
+        stall_duration_s: float = 0.02,
+        ensure_one_of_each: bool = True,
+    ) -> "FaultPlan":
+        """A seed-deterministic plan over ``n_batches`` batch ids.
+
+        Each batch id draws each fault kind independently at its rate;
+        ``ensure_one_of_each`` additionally pins one kill, one clock-lock
+        failure and one stall onto the earliest batch ids so even tiny
+        runs satisfy the chaos harness's non-trivial-plan requirement.
+        """
+        rng = np.random.default_rng(seed)
+        events: list[FaultEvent] = []
+        if ensure_one_of_each and n_batches >= 3:
+            events.append(FaultEvent(KILL_DEVICE, batch_id=0))
+            events.append(FaultEvent(FAIL_CLOCK_LOCK, batch_id=1))
+            events.append(FaultEvent(STALL_WORKER, batch_id=2,
+                                     duration=stall_duration_s))
+        draws = rng.random((n_batches, 4))
+        for b in range(3 if ensure_one_of_each and n_batches >= 3 else 0,
+                       n_batches):
+            if draws[b, 0] < kill_rate:
+                events.append(FaultEvent(KILL_DEVICE, batch_id=b))
+            if draws[b, 1] < clock_fail_rate:
+                events.append(FaultEvent(FAIL_CLOCK_LOCK, batch_id=b))
+            if draws[b, 2] < plan_fail_rate:
+                events.append(FaultEvent(FAIL_PLAN_BUILD, batch_id=b))
+            if draws[b, 3] < stall_rate:
+                events.append(FaultEvent(STALL_WORKER, batch_id=b,
+                                         duration=stall_duration_s))
+        return cls(events=events, seed=seed)
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    """Retry-with-jittered-backoff, deterministically.
+
+    The jitter is a pure function of (seed, token, attempt) — a hash, not
+    a shared RNG — so concurrent retries for different batches never
+    perturb each other's delays and a re-run reproduces them exactly.
+    Delays follow capped exponential backoff with +/-50% jitter.
+    """
+
+    max_retries: int = 2
+    base_delay_s: float = 0.001
+    max_delay_s: float = 0.1
+    seed: int = 0
+
+    def delay(self, attempt: int, token: int = 0) -> float:
+        """Backoff before retry ``attempt`` (1-based) of work ``token``."""
+        if attempt < 1:
+            raise ValueError(f"attempt is 1-based, got {attempt}")
+        raw = min(self.base_delay_s * 2.0 ** (attempt - 1), self.max_delay_s)
+        h = hashlib.blake2b(
+            f"{self.seed}:{token}:{attempt}".encode(), digest_size=8)
+        frac = int.from_bytes(h.digest(), "big") / 2.0 ** 64
+        return raw * (0.5 + frac)              # in [0.5, 1.5) * raw
+
+
+# Circuit-breaker states.
+CLOSED = "closed"
+OPEN = "open"
+HALF_OPEN = "half-open"
+
+
+@dataclasses.dataclass
+class CircuitBreaker:
+    """Per-device circuit breaker: quarantine after repeated failures,
+    probe after a cooldown, re-admit only on a successful probe.
+
+      closed     traffic flows; failures count against the threshold
+      open       quarantined; no traffic until ``cooldown_s`` elapses
+      half-open  one probe admitted; success -> closed, failure -> open
+
+    Timestamps come from the caller's timer so tests and the chaos
+    harness can drive the state machine with fake clocks.
+    """
+
+    failure_threshold: int = 2
+    cooldown_s: float = 0.05
+
+    def __post_init__(self):
+        self.state = CLOSED
+        self.failures = 0               # consecutive failures while closed
+        self.opened_at: float | None = None
+        self.opens = 0                  # times the breaker tripped
+        self.probes = 0                 # half-open probes admitted
+
+    def allow(self, now: float) -> bool:
+        """May this device receive work at time ``now``?"""
+        if self.state == CLOSED:
+            return True
+        if self.state == OPEN:
+            if self.opened_at is not None and \
+                    now - self.opened_at >= self.cooldown_s:
+                self.state = HALF_OPEN
+                self.probes += 1
+                return True             # the single probe
+            return False
+        # half-open: the probe is in flight; no further traffic until it
+        # reports back.
+        return False
+
+    def would_allow(self, now: float) -> bool:
+        """Like :meth:`allow` but pure — no state transition, no probe.
+
+        Used when *choosing* a redistribution target, so that scanning
+        candidate workers never consumes a quarantined device's single
+        half-open probe allowance.
+        """
+        if self.state == CLOSED:
+            return True
+        if self.state == OPEN:
+            return (self.opened_at is not None
+                    and now - self.opened_at >= self.cooldown_s)
+        return False
+
+    def record_failure(self, now: float) -> None:
+        if self.state == HALF_OPEN:
+            self.state = OPEN           # failed probe: quarantine again
+            self.opened_at = now
+            self.opens += 1
+            return
+        self.failures += 1
+        if self.failures >= self.failure_threshold:
+            self.state = OPEN
+            self.opened_at = now
+            self.opens += 1
+
+    def record_success(self) -> None:
+        self.state = CLOSED
+        self.failures = 0
+        self.opened_at = None

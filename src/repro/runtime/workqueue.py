@@ -39,9 +39,16 @@ class WorkStealingQueue:
         self._queues[worker].append(item)
         self.pushes += 1
 
-    def push_least_loaded(self, item: Any) -> int:
-        """Enqueue on the currently shortest queue; returns the worker."""
-        worker = min(range(self.n_workers), key=lambda w: len(self._queues[w]))
+    def push_least_loaded(self, item: Any,
+                          allowed: list[int] | None = None) -> int:
+        """Enqueue on the currently shortest queue; returns the worker.
+
+        ``allowed`` restricts the candidate workers — how the serving
+        layer redistributes work away from quarantined or stalled
+        devices.  An empty/None ``allowed`` considers every worker.
+        """
+        candidates = list(allowed) if allowed else range(self.n_workers)
+        worker = min(candidates, key=lambda w: len(self._queues[w]))
         self.push(worker, item)
         return worker
 
@@ -61,6 +68,10 @@ class WorkStealingQueue:
 
     def pending(self) -> int:
         return sum(len(q) for q in self._queues)
+
+    def items(self) -> list[Any]:
+        """Every queued item (in worker order), without removing them."""
+        return [item for q in self._queues for item in q]
 
     def clear(self) -> list[Any]:
         """Remove and return every queued item (in worker order)."""

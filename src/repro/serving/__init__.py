@@ -4,6 +4,8 @@
   batcher    Eq. 6 memory-budgeted request coalescing
   cache      plan + DVFS-sweep cache (one sweep per shape, ever)
   dispatch   work-stealing batch placement across devices
+  slo        per-kind SLO budgets, admission control / load shedding and
+             the graceful-degradation ladder (docs/robustness.md)
   service    FFTService: enqueue -> batch -> plan-cache -> clock-plan ->
              execute -> account (see docs/serving.md)
 """
@@ -13,9 +15,16 @@ from repro.serving.dispatch import Dispatcher
 from repro.serving.request import (KIND_FDAS, KIND_FFT, KIND_PULSAR,
                                    FFTRequest, RequestReceipt, ShapeKey)
 from repro.serving.service import FFTService, ServiceReport
+from repro.serving.slo import (RUNG_BOOST_HEURISTIC, RUNG_PURE_JAX,
+                               RUNG_TUNED_DVFS, SLO, AdmissionController,
+                               AdmissionDecision, SLOPolicy,
+                               max_rung_for_kind, rung_name)
 
 __all__ = [
-    "Batch", "CacheEntry", "CacheStats", "Dispatcher", "FFTRequest",
-    "FFTService", "KIND_FDAS", "KIND_FFT", "KIND_PULSAR", "PlanSweepCache",
-    "RequestReceipt", "ServiceReport", "ShapeKey", "coalesce",
+    "AdmissionController", "AdmissionDecision", "Batch", "CacheEntry",
+    "CacheStats", "Dispatcher", "FFTRequest", "FFTService", "KIND_FDAS",
+    "KIND_FFT", "KIND_PULSAR", "PlanSweepCache", "RequestReceipt",
+    "RUNG_BOOST_HEURISTIC", "RUNG_PURE_JAX", "RUNG_TUNED_DVFS",
+    "SLO", "SLOPolicy", "ServiceReport", "ShapeKey", "coalesce",
+    "max_rung_for_kind", "rung_name",
 ]

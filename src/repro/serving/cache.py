@@ -36,6 +36,7 @@ class CacheStats:
     misses: int = 0
     plan_builds: int = 0
     sweeps: int = 0
+    degraded_builds: int = 0    # sweep-free boost-heuristic entries built
 
     @property
     def hit_rate(self) -> float:
@@ -99,6 +100,10 @@ class PlanSweepCache:
         # a re-tune (or toggling REPRO_FFT_DISABLE_TUNING) can never be
         # served a stale plan built under the previous config.
         self._entries: dict[tuple, CacheEntry] = {}
+        # Degraded (boost-heuristic) entries are keyed on the bare shape
+        # key: the whole point of the rung is to skip tuning lookups and
+        # sweeps, so the tuned config can play no part in the build.
+        self._degraded: dict[ShapeKey, CacheEntry] = {}
         self.stats = CacheStats()
 
     def __len__(self) -> int:
@@ -151,26 +156,70 @@ class PlanSweepCache:
         self._entries[cache_key] = entry
         return entry
 
-    def _build(self, key: ShapeKey) -> CacheEntry:
+    def peek(self, key: ShapeKey) -> CacheEntry | None:
+        """The cached tuned entry, or None — never builds, never counts.
+
+        The admission controller's deterministic backlog estimates read
+        cached sweeps through this without perturbing hit/miss stats.
+        """
+        return self._entries.get((key, self._tuned_config(key)))
+
+    def degraded_entry(self, key: ShapeKey) -> CacheEntry:
+        """The degradation ladder's rung-1 entry for ``key``.
+
+        Built with the *heuristic* plan (tuning context bypassed) and NO
+        clock-grid sweep — the one operating point is boost, evaluated
+        directly — so it is the cheapest entry the service can stand up
+        under pressure or after a tuned plan/sweep build failure.
+        """
+        cached = self._degraded.get(key)
+        if cached is not None:
+            return cached
+        entry = self._build(key, degraded=True)
+        self._degraded[key] = entry
+        return entry
+
+    def _boost_only_sweep(self, profile: WorkloadProfile) -> dvfs.SweepResult:
+        """A single-point 'sweep': the boost clock, evaluated directly."""
+        from repro.core.energy import evaluate
+        import numpy as np
+        boost = evaluate(profile, self.device, self._power_model,
+                         np.array([self.device.f_max]))[0]
+        return dvfs.SweepResult(profile=profile, points=[boost],
+                                optimal=boost, boost=boost, base=None)
+
+    def _build(self, key: ShapeKey, *, degraded: bool = False) -> CacheEntry:
         extras: dict = {}
         if key.kind == KIND_PULSAR:
-            plan, fn, profile, n_fft, extras = self._build_pulsar(key)
+            plan, fn, profile, n_fft, extras = self._build_pulsar(
+                key, degraded=degraded)
         elif key.kind == KIND_FDAS:
             plan, fn, profile, n_fft = self._build_fdas(key)
         else:
-            plan, fn, profile, n_fft = self._build_fft(key)
-        self.stats.sweeps += 1
-        sweep = self._sweep_fn(profile, self.device, self._power_model)
+            plan, fn, profile, n_fft = self._build_fft(key,
+                                                       degraded=degraded)
+        if degraded:
+            self.stats.degraded_builds += 1
+            sweep = self._boost_only_sweep(profile)
+        else:
+            self.stats.sweeps += 1
+            sweep = self._sweep_fn(profile, self.device, self._power_model)
         return CacheEntry(key=key, plan=plan, fn=fn, profile=profile,
                           sweep=sweep, n_fft_model=n_fft, **extras)
 
-    def _build_fft(self, key: ShapeKey):
+    def _build_fft(self, key: ShapeKey, *, degraded: bool = False):
         self.stats.plan_builds += 1
         if key.shape:
             # N-D shapes are first-class: one plan graph (fused
             # transpose-write passes) + one sweep per distinct shape.
-            from repro.fft.plan_nd import plan_nd
-            plan = plan_nd(key.shape, key.transform)
+            from repro.fft.plan_nd import plan_nd, plan_nd_with_config
+            plan = (plan_nd_with_config(key.shape, key.transform)
+                    if degraded else plan_nd(key.shape, key.transform))
+        elif degraded:
+            # Degraded builds bypass the tuning context: the heuristic
+            # plan object, no tuning-cache consults.
+            from repro.fft.plan import plan_with_config
+            plan = plan_with_config(key.n, key.transform)
         elif key.transform == "c2c":
             # The injectable plan_fn keeps its historical (n) signature
             # for C2C; real transforms pass the kind through
@@ -186,9 +235,11 @@ class PlanSweepCache:
         profile = fft_workload(case, self.device)
         return plan, fn, profile, case.n_fft
 
-    def _build_pulsar(self, key: ShapeKey):
+    def _build_pulsar(self, key: ShapeKey, *, degraded: bool = False):
         """Pulsar-pipeline entries: the full search graph (dedispersion ->
         FDAS -> harmonic sum -> sift) with a per-stage clock plan.
+        Degraded builds replace every per-stage clock sweep with the
+        boost point (no grid sweeps anywhere on the build path).
 
         The entry's canonical geometry comes from the ShapeKey alone —
         a default FilterbankSpec at the key's (nchan, ntime), the
@@ -214,10 +265,14 @@ class PlanSweepCache:
         bank = TemplateBank.linear(
             zmax=max((key.templates - 1) / 2.0, 0.0),
             n_templates=key.templates)
+        stage_sweep = (
+            (lambda profile, device, power_model=None, **kw:
+             self._boost_only_sweep(profile))
+            if degraded else self._sweep_fn)
         stage_plan = plan_pulsar_stages(
             spec, dplan, bank, key.n_harmonics, self.device,
             batch_bytes=self.batch_bytes, power_model=self._power_model,
-            sweep_fn=self._sweep_fn)
+            sweep_fn=stage_sweep)
 
         def fn(x, _plan=dplan, _bank=bank, _h=key.n_harmonics):
             return serving_sifted(

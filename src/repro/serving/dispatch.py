@@ -17,6 +17,7 @@ from typing import Any, Callable, Sequence
 
 import jax
 
+from repro.runtime.faults import DrainDeadlineError
 from repro.runtime.workqueue import WorkStealingQueue
 from repro.serving.batcher import Batch
 
@@ -40,14 +41,30 @@ class Dispatcher:
         """Remove and return every queued batch (failure recovery)."""
         return self.queue.clear()
 
-    def drain(self, execute: Callable[[Batch, int, Any], None]) -> int:
+    def drain(
+        self,
+        execute: Callable[[Batch, int, Any], None],
+        *,
+        timer: Callable[[], float] | None = None,
+        deadline_s: float | None = None,
+    ) -> int:
         """Run every queued batch; returns the number executed.
 
         ``execute(batch, worker, device)`` is called once per batch, on the
-        worker that actually ran it (owner or thief).
+        worker that actually ran it (owner or thief).  ``execute`` may
+        re-queue a batch instead of running it (fault redistribution), so
+        with ``deadline_s`` set (seconds on ``timer``'s clock, measured
+        from drain start) a wedged worker surfaces a
+        :class:`~repro.runtime.faults.DrainDeadlineError` naming the
+        stuck batches' shape keys instead of looping forever.
         """
         executed = 0
+        t0 = timer() if timer is not None and deadline_s is not None else 0.0
         while self.queue.pending():
+            if (deadline_s is not None and timer is not None
+                    and timer() - t0 > deadline_s):
+                raise DrainDeadlineError(
+                    deadline_s, [b.key for b in self.queue.items()])
             for worker in range(self.queue.n_workers):
                 batch = self.queue.pop(worker)
                 if batch is None:

@@ -195,7 +195,17 @@ class StageReceipt:
 
 @dataclasses.dataclass
 class RequestReceipt:
-    """Per-request accounting, filled in when the batch executes."""
+    """Per-request accounting, filled in when the batch executes.
+
+    Every submitted request terminates in exactly one receipt — served at
+    some degradation rung (possibly after retries) or shed with an
+    explicit reason.  ``rung`` is the graceful-degradation rung the
+    request actually executed at (0 = tuned plan + DVFS lock, 1 =
+    heuristic plan at boost, 2 = pure-JAX fallback; see
+    ``repro.serving.slo``); ``reason`` states why a request was degraded
+    or shed (``admission:*`` for load shedding / pressure, ``fault:*``
+    for failure-driven outcomes).
+    """
 
     request: FFTRequest
     batch_id: int
@@ -212,6 +222,33 @@ class RequestReceipt:
     # --- pulsar-pipeline requests only -----------------------------------
     stages: list[StageReceipt] | None = None   # per-stage clock + J shares
     realtime_margin: float | None = None       # S = t_acquire / t_process
+    # --- robustness accounting (repro.serving.slo / runtime.faults) ------
+    status: str = "served"      # "served" | "shed"
+    rung: int = 0               # degradation rung the batch executed at
+    retries: int = 0            # executions lost to faults before success
+    reason: str | None = None   # why degraded/shed (None: clean rung-0)
+
+    @classmethod
+    def make_shed(cls, request: FFTRequest, reason: str,
+                  now: float) -> "RequestReceipt":
+        """A terminal receipt for a request that was never executed."""
+        return cls(request=request, batch_id=-1, worker=-1,
+                   queue_latency=max(now - request.t_enqueue, 0.0),
+                   service_latency=0.0, clock_mhz=0.0, modelled_time_s=0.0,
+                   energy_j=0.0, boost_energy_j=0.0, status="shed",
+                   reason=reason)
+
+    @property
+    def outcome(self) -> str:
+        """"served" | "retried" | "shed" — the chaos-harness taxonomy."""
+        if self.status == "shed":
+            return "shed"
+        return "retried" if self.retries > 0 else "served"
+
+    @property
+    def rung_name(self) -> str:
+        from repro.serving.slo import rung_name
+        return rung_name(self.rung)
 
     @property
     def latency(self) -> float:

@@ -19,12 +19,23 @@ The energy numbers come from the repository's analytic model — the same
 model the benchmarks validate against the paper — because this container
 has no power sensor; on instrumented hardware the accounting hook is one
 power-trace integration (repro.core.energy.energy_from_trace).
+
+Robustness (repro.serving.slo + repro.runtime.faults): an optional
+``slo`` policy turns drain() into admission-controlled serving — every
+rejected or pressure-degraded request still terminates in a receipt
+stating why.  An optional ``fault_plan`` injects deterministic serving
+faults; the service answers with per-device circuit breakers,
+jittered-backoff retries, work redistribution through the work-stealing
+queue, and the graceful-degradation ladder (tuned-dvfs -> boost-heuristic
+-> pure-jax) instead of crashing.  Every receipt records the rung it was
+served at.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
-from typing import Any, Sequence
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -33,11 +44,18 @@ import numpy as np
 from repro.core.hardware import TPU_V5E, DeviceSpec
 from repro.core.power_model import PowerModel
 from repro.core.scheduler import ClockController
+from repro.runtime.faults import (FAIL_CLOCK_LOCK, FAIL_PLAN_BUILD,
+                                  KILL_DEVICE, STALL_WORKER, CircuitBreaker,
+                                  ClockLockError, DeviceLostError, FaultPlan,
+                                  PlanBuildError, RetryPolicy)
 from repro.serving.batcher import Batch, coalesce
 from repro.serving.cache import CacheStats, PlanSweepCache
 from repro.serving.dispatch import Dispatcher
 from repro.serving.request import (KIND_FFT, KIND_PULSAR, FFTRequest,
                                    RequestReceipt, StageReceipt)
+from repro.serving.slo import (RUNG_BOOST_HEURISTIC, RUNG_PURE_JAX,
+                               RUNG_TUNED_DVFS, SHED, SLOPolicy,
+                               AdmissionController, max_rung_for_kind)
 
 _EXEC_DTYPE = {"fp16": jnp.complex64, "fp32": jnp.complex64,
                "fp64": jnp.complex128}
@@ -63,6 +81,21 @@ class ServiceReport:
     cache: CacheStats
     steals: int
     clock_locks: int
+    # --- robustness (zero on a fault-free, SLO-less service) --------------
+    shed: int = 0                  # terminal shed receipts (all reasons)
+    fault_shed: int = 0            # shed with a fault:* reason
+    degraded: int = 0              # served at rung > 0
+    retried: int = 0               # served after >= 1 lost execution
+    redistributions: int = 0       # batches pushed away from a sick worker
+    breaker_opens: int = 0         # circuit-breaker quarantines
+    slo: dict | None = None        # SLOPolicy.evaluate() scorecard
+
+    @property
+    def availability(self) -> float:
+        """Served / (served + fault-shed).  Admission sheds are excluded:
+        refusing work the SLO says cannot be served on time is the
+        contract working, not the service failing."""
+        return self.n_requests / max(self.n_requests + self.fault_shed, 1)
 
     @property
     def joules_per_transform(self) -> float:
@@ -105,6 +138,13 @@ class FFTService:
         sweep_fn=None,
         power_model: PowerModel | None = None,
         timer=time.monotonic,
+        slo: SLOPolicy | None = None,
+        fault_plan: FaultPlan | None = None,
+        retry_policy: RetryPolicy | None = None,
+        breaker_threshold: int = 2,
+        breaker_cooldown_s: float = 0.05,
+        drain_deadline_s: float | None = None,
+        sleep_fn: Callable[[float], None] | None = None,
     ):
         self.device_spec = device_spec
         # Default batch budget: an eighth of device memory, capped at the
@@ -140,6 +180,26 @@ class FFTService:
         self._pending: list[FFTRequest] = []
         self._receipts: dict[int, RequestReceipt] = {}
         self._next_batch_id = 0
+        # --- robustness state ---------------------------------------------
+        self.slo = slo
+        self.admission = (AdmissionController(slo, device_spec)
+                          if slo is not None else None)
+        self.faults = fault_plan
+        self.retry = retry_policy if retry_policy is not None else RetryPolicy()
+        self.drain_deadline_s = drain_deadline_s
+        # Backoff sleeps are computed deterministically but not actually
+        # slept by default — the cooperative drain loop would only be
+        # blocking itself.  Threaded deployments pass time.sleep.
+        self._sleep = sleep_fn if sleep_fn is not None else (lambda s: None)
+        self._breaker_threshold = breaker_threshold
+        self._breaker_cooldown_s = breaker_cooldown_s
+        self.breakers: dict[int, CircuitBreaker] = {}
+        self._stalled_until: dict[int, float] = {}
+        self._attempts: dict[int, int] = {}      # batch_id -> lost executions
+        self._forced: dict[int, tuple[int, str]] = {}  # req_id -> rung, why
+        self._rung2_fns: dict[Any, Callable] = {}
+        self.redistributions = 0
+        self.stalls_honoured = 0
 
     # ------------------------------------------------------------------ #
     # enqueue
@@ -198,8 +258,17 @@ class FFTService:
     # batch -> plan-cache -> clock-plan -> execute -> account
     # ------------------------------------------------------------------ #
 
-    def drain(self) -> list[RequestReceipt]:
+    def drain(self, *, deadline_s: float | None = None
+              ) -> list[RequestReceipt]:
         """Serve every pending request; returns their receipts in order.
+
+        With an ``slo`` policy the admission controller runs first: shed
+        requests terminate immediately in a ``status="shed"`` receipt
+        (with the reason), pressure-degraded ones carry their forced
+        rung into execution.  ``deadline_s`` (default: the service's
+        ``drain_deadline_s``) bounds the drain loop on the service timer
+        so a wedged worker surfaces a DrainDeadlineError naming the
+        stuck shapes instead of looping forever.
 
         If a batch fails mid-cycle, already-served requests keep their
         receipts and every unserved request is re-queued for the next
@@ -209,27 +278,46 @@ class FFTService:
         pending, self._pending = self._pending, []
         if not pending:
             return []
+        deadline = (deadline_s if deadline_s is not None
+                    else self.drain_deadline_s)
+        serve = pending
+        if self.admission is not None:
+            serve = []
+            for d in self.admission.decide(pending, self.cache):
+                if d.action == SHED:
+                    self._store(RequestReceipt.make_shed(
+                        d.request, d.reason, self._timer()))
+                else:
+                    if d.rung > RUNG_TUNED_DVFS:
+                        self._forced[d.request.request_id] = (d.rung, d.reason)
+                    serve.append(d.request)
         try:
-            if self.coalesce_requests:
-                batches = coalesce(pending, device_name=self.device_spec.name,
-                                   batch_bytes=self.batch_bytes,
-                                   start_id=self._next_batch_id)
-            else:
-                batches = [
-                    Batch(self._next_batch_id + i,
-                          r.shape_key(self.device_spec.name), [r])
-                    for i, r in enumerate(pending)
-                ]
-            self._next_batch_id += len(batches)
-            for batch in batches:
-                self.dispatcher.submit(batch)
-            self.dispatcher.drain(self._execute)
+            if serve:
+                if self.coalesce_requests:
+                    batches = coalesce(serve,
+                                       device_name=self.device_spec.name,
+                                       batch_bytes=self.batch_bytes,
+                                       start_id=self._next_batch_id)
+                else:
+                    batches = [
+                        Batch(self._next_batch_id + i,
+                              r.shape_key(self.device_spec.name), [r])
+                        for i, r in enumerate(serve)
+                    ]
+                self._next_batch_id += len(batches)
+                for batch in batches:
+                    self.dispatcher.submit(batch)
+                self.dispatcher.drain(self._execute, timer=self._timer,
+                                      deadline_s=deadline)
         except BaseException:
             self.dispatcher.clear()          # drop stale queued batches
-            unserved = [r for r in pending
+            unserved = [r for r in serve
                         if r.request_id not in self._receipts]
             self._pending = unserved + self._pending
             raise
+        finally:
+            for r in serve:
+                self._forced.pop(r.request_id, None)
         return [self._receipts[r.request_id] for r in pending
                 if r.request_id in self._receipts]   # cap may have evicted
 
@@ -261,9 +349,129 @@ class FFTService:
         constrained = [b for b in budgets if b is not None]
         return min(constrained) if constrained else None
 
+    # ------------------------------------------------------------------ #
+    # fault handling
+    # ------------------------------------------------------------------ #
+
+    def _breaker(self, worker: int) -> CircuitBreaker:
+        br = self.breakers.get(worker)
+        if br is None:
+            br = CircuitBreaker(failure_threshold=self._breaker_threshold,
+                                cooldown_s=self._breaker_cooldown_s)
+            self.breakers[worker] = br
+        return br
+
+    def _peek_blocked(self, worker: int, now: float) -> bool:
+        """Is ``worker`` stalled or quarantined?  Pure — no probe consumed."""
+        if self._stalled_until.get(worker, 0.0) > now:
+            return True
+        br = self.breakers.get(worker)
+        return br is not None and not br.would_allow(now)
+
+    def _reassign(self, batch: Batch, *, exclude: int, now: float) -> None:
+        """Push ``batch`` back onto the healthiest other worker's queue."""
+        others = [w for w in range(self.dispatcher.queue.n_workers)
+                  if w != exclude]
+        healthy = [w for w in others if not self._peek_blocked(w, now)]
+        self.dispatcher.queue.push_least_loaded(batch,
+                                                allowed=healthy or others)
+        self.redistributions += 1
+
+    def _batch_rung(self, batch: Batch) -> tuple[int, list[str]]:
+        """The admission-forced rung of the batch: the deepest rung forced
+        on any member (a coalesced neighbour's pressure degrade applies to
+        the whole batch), capped at what the kind supports."""
+        rung, reasons = RUNG_TUNED_DVFS, []
+        for r in batch.requests:
+            forced = self._forced.get(r.request_id)
+            if forced is None:
+                continue
+            rung = max(rung, forced[0])
+            if forced[1] not in reasons:
+                reasons.append(forced[1])
+        return min(rung, max_rung_for_kind(batch.key.kind)), reasons
+
+    def _rung2_fn(self, key) -> Callable:
+        """The pure-JAX twin of ``key``'s executable (bottom rung).
+
+        Traced once per key under ``pallas_disabled()`` so the jitted
+        function captures the pure-JAX engine permanently — a kernel-level
+        miscompile or Pallas-runtime fault can never reach this rung.
+        """
+        fn = self._rung2_fns.get(key)
+        if fn is None:
+            from repro.fft.plan import pallas_disabled, plan_with_config
+            with pallas_disabled():
+                if key.shape:
+                    from repro.fft.plan_nd import plan_nd_with_config
+                    plan = plan_nd_with_config(key.shape, key.transform)
+                else:
+                    plan = plan_with_config(key.n, key.transform)
+            fn = jax.jit(plan.fn)
+            self._rung2_fns[key] = fn
+        return fn
+
     def _execute(self, batch: Batch, worker: int, device: Any) -> None:
-        entry = self.cache.entry(batch.key)
-        point = entry.point_for(self._effective_budget(batch))
+        """Fault-aware execution wrapper around :meth:`_execute_batch`.
+
+        Blocked workers (stalled or breaker-open) hand the batch to a
+        healthy peer; an injected stall marks the worker and redistributes;
+        a lost device trips the breaker and retries the batch elsewhere
+        under the retry policy, shedding with "fault:retries-exhausted"
+        receipts only when it is spent.
+        """
+        now = self._timer()
+        if self._stalled_until.get(worker, 0.0) > now:
+            self._reassign(batch, exclude=worker, now=now)
+            return
+        if not self._breaker(worker).allow(now):
+            self._reassign(batch, exclude=worker, now=now)
+            return
+        if self.faults is not None:
+            ev = self.faults.take(STALL_WORKER, batch_id=batch.batch_id,
+                                  worker=worker)
+            if ev is not None:
+                self.stalls_honoured += 1
+                self._stalled_until[worker] = now + ev.duration
+                self._reassign(batch, exclude=worker, now=now)
+                return
+        try:
+            self._execute_batch(batch, worker, device)
+        except DeviceLostError:
+            now = self._timer()
+            self._breaker(worker).record_failure(now)
+            attempts = self._attempts.get(batch.batch_id, 0) + 1
+            self._attempts[batch.batch_id] = attempts
+            if attempts > self.retry.max_retries:
+                self._attempts.pop(batch.batch_id, None)
+                for req in batch.requests:
+                    self._store(RequestReceipt.make_shed(
+                        req, "fault:retries-exhausted", now))
+                return
+            self._sleep(self.retry.delay(attempts, token=batch.batch_id))
+            self._reassign(batch, exclude=worker, now=now)
+        else:
+            self._breaker(worker).record_success()
+
+    def _execute_batch(self, batch: Batch, worker: int, device: Any) -> None:
+        rung, reasons = self._batch_rung(batch)
+        if (self.faults is not None
+                and self.faults.take(FAIL_PLAN_BUILD, batch_id=batch.batch_id,
+                                     worker=worker)):
+            rung = max(rung, RUNG_BOOST_HEURISTIC)
+            reasons.append("fault:plan-build-failed")
+        try:
+            entry = (self.cache.entry(batch.key) if rung == RUNG_TUNED_DVFS
+                     else self.cache.degraded_entry(batch.key))
+        except PlanBuildError:
+            # A real tuned-build failure (not just an injected event):
+            # walk down the ladder instead of crashing.
+            rung = max(rung, RUNG_BOOST_HEURISTIC)
+            if "fault:plan-build-failed" not in reasons:
+                reasons.append("fault:plan-build-failed")
+            entry = self.cache.degraded_entry(batch.key)
+        point = (entry.point_for(self._effective_budget(batch))
+                 if rung == RUNG_TUNED_DVFS else entry.sweep.boost)
         x = self._stack(batch)
         rows = x.shape[0]
         if self.bucket_batches:
@@ -272,32 +480,67 @@ class FFTService:
             # recompiling for every coalesced batch size.
             from repro.fft.distributed import pad_rows
             x = pad_rows(x, 1 << (rows - 1).bit_length())
+        # Rung 0 locks at the sweep optimum; degraded rungs still lock, at
+        # boost, to pin against governor drift — clock control is
+        # independent of which compute path runs, so a lock failure is
+        # observable on every rung.
+        lock_f = point.f
+        if lock_f is not None and self.faults is not None \
+                and self.faults.take(FAIL_CLOCK_LOCK, batch_id=batch.batch_id,
+                                     worker=worker):
+            # The clock lock could not be acquired: run unlocked at the
+            # device's boost default.  At rung 0 the tuned plan is kept —
+            # only the clock guarantee is lost.
+            if rung == RUNG_TUNED_DVFS:
+                rung = RUNG_BOOST_HEURISTIC
+                point = entry.sweep.boost
+            reasons.append("fault:clock-lock-failed")
+            lock_f = None
         t_start = self._timer()
-        with self.clock.locked(point.f):
+        ctx = (self.clock.locked(lock_f) if lock_f is not None
+               else contextlib.nullcontext())
+        with ctx:
+            # An injected device kill fires mid-batch: after the lock and
+            # dispatch decisions, before results exist.
+            if (self.faults is not None
+                    and self.faults.take(KILL_DEVICE, batch_id=batch.batch_id,
+                                         worker=worker)):
+                raise DeviceLostError(worker)
             if (self.mesh is not None and batch.key.kind == KIND_FFT
-                    and x.shape[0] > 1):
+                    and x.shape[0] > 1 and rung < RUNG_PURE_JAX):
                 from repro.fft.distributed import batch_parallel_fft
                 y = batch_parallel_fft(x, self.mesh, fft_fn=entry.plan)
             else:
                 if device is not None:
                     x = jax.device_put(x, device)
-                y = entry.fn(x)
+                if rung >= RUNG_PURE_JAX and batch.key.kind == KIND_FFT:
+                    from repro.fft.plan import pallas_disabled
+                    with pallas_disabled():
+                        y = self._rung2_fn(batch.key)(x)
+                else:
+                    y = entry.fn(x)
             y = jax.block_until_ready(y)
         y = y[:rows]
         t_done = self._timer()
-        self._account(batch, worker, entry, point, y, t_start, t_done)
+        self._account(batch, worker, entry, point, y, t_start, t_done,
+                      rung=rung, reason="; ".join(reasons) or None)
 
-    def _account(self, batch, worker, entry, point, y, t_start, t_done):
+    def _store(self, receipt: RequestReceipt) -> None:
+        if (self.max_retained_receipts is not None
+                and len(self._receipts) >= self.max_retained_receipts):
+            self._receipts.pop(next(iter(self._receipts)))  # oldest
+        self._receipts[receipt.request.request_id] = receipt
+
+    def _account(self, batch, worker, entry, point, y, t_start, t_done,
+                 rung=RUNG_TUNED_DVFS, reason=None):
         per_time, per_energy = entry.per_transform(point)
         _, per_boost = entry.per_transform(entry.sweep.boost)
+        retries = self._attempts.pop(batch.batch_id, 0)
         offset = 0
         for req in batch.requests:
             rows = req.batch
             result = y[offset:offset + rows] if self.keep_results else None
             offset += rows
-            if (self.max_retained_receipts is not None
-                    and len(self._receipts) >= self.max_retained_receipts):
-                self._receipts.pop(next(iter(self._receipts)))  # oldest
             stages = None
             if entry.stages is not None:
                 # Pipeline entries: scale the modelled batch's per-stage
@@ -307,7 +550,7 @@ class FFTService:
                                        time_s=s.time * share,
                                        energy_j=s.energy * share)
                           for s in entry.stages.stages]
-            self._receipts[req.request_id] = RequestReceipt(
+            self._store(RequestReceipt(
                 request=req,
                 batch_id=batch.batch_id,
                 worker=worker,
@@ -320,7 +563,10 @@ class FFTService:
                 result=result,
                 stages=stages,
                 realtime_margin=entry.realtime_margin,
-            )
+                rung=rung,
+                retries=retries,
+                reason=reason,
+            ))
 
     # ------------------------------------------------------------------ #
     # service-level reporting
@@ -328,22 +574,33 @@ class FFTService:
 
     def report(self) -> ServiceReport:
         receipts = self.receipts
-        lat = np.array([r.latency for r in receipts]) if receipts else np.zeros(1)
+        served = [r for r in receipts if r.status == "served"]
+        shed = [r for r in receipts if r.status == "shed"]
+        fault_shed = sum(1 for r in shed
+                         if (r.reason or "").startswith("fault:"))
+        lat = np.array([r.latency for r in served]) if served else np.zeros(1)
         # One wall-time contribution per batch (receipts in a batch share
         # the batch's service latency), over the *retained* window so every
         # report field covers the same receipts when retention is capped.
-        batch_wall = {r.batch_id: r.service_latency for r in receipts}
+        batch_wall = {r.batch_id: r.service_latency for r in served}
         return ServiceReport(
-            n_requests=len(receipts),
-            n_transforms=sum(r.request.batch for r in receipts),
+            n_requests=len(served),
+            n_transforms=sum(r.request.batch for r in served),
             n_batches=len(batch_wall),
             wall_s=sum(batch_wall.values()),
-            energy_j=sum(r.energy_j for r in receipts),
-            boost_energy_j=sum(r.boost_energy_j for r in receipts),
+            energy_j=sum(r.energy_j for r in served),
+            boost_energy_j=sum(r.boost_energy_j for r in served),
             p50_latency_s=float(np.percentile(lat, 50)),
             p99_latency_s=float(np.percentile(lat, 99)),
             mean_latency_s=float(lat.mean()),
             cache=self.cache.stats,
             steals=self.dispatcher.steals,
             clock_locks=self.clock.lock_count,
+            shed=len(shed),
+            fault_shed=fault_shed,
+            degraded=sum(1 for r in served if r.rung > RUNG_TUNED_DVFS),
+            retried=sum(1 for r in served if r.retries > 0),
+            redistributions=self.redistributions,
+            breaker_opens=sum(b.opens for b in self.breakers.values()),
+            slo=self.slo.evaluate(receipts) if self.slo is not None else None,
         )
