@@ -41,6 +41,11 @@ figure's headline quantity).
                         gates the every-request-gets-a-receipt invariant,
                         availability and bit-reproducibility
                         -> persists BENCH_chaos.json
+  power                 closed-loop power governance: governed 8-device
+                        site convergence under a power cap, watchdog +
+                        static-sweep fallback under injected sensor
+                        faults, the emergency shed rung, telemetered
+                        serving receipts -> persists BENCH_power.json
 
 Usage: ``python benchmarks/run.py [target ...]`` — no arguments runs all.
 """
@@ -77,6 +82,29 @@ def _timeit(fn, *args, n=5, warmup=2, reduce=None):
     mean = (lambda s: sum(s) / len(s))
     return _time_fn(fn, *args, repeats=n, warmup=warmup,
                     reduce=mean if reduce is None else reduce) * 1e6
+
+
+#: Common envelope version for every persisted BENCH_*.json.  Bump when
+#: any emitter's layout changes shape (v2 added the shared
+#: schema_version/device stamp and the power target).
+BENCH_SCHEMA_VERSION = 2
+
+
+def _persist(name, out, *, device):
+    """Write ``BENCH_<name>.json`` with the common metadata stamp.
+
+    Every persisted benchmark carries the same envelope — a
+    ``schema_version`` and the ``device`` whose DeviceSpec the modelled
+    numbers are for — so downstream tooling parses all of them the same
+    way.  Keys already present in ``out`` win over the stamp.
+    """
+    out = {"schema_version": BENCH_SCHEMA_VERSION, "device": device,
+           "backend": jax.default_backend(), **out}
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    return os.path.abspath(path)
 
 
 def _row(name, us, derived):
@@ -394,11 +422,9 @@ def fft():
         },
         "lengths": rows,
     }
-    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_fft.json")
-    with open(path, "w") as f:
-        json.dump(out, f, indent=2)
+    path = _persist("fft", out, device=dev.name)
     _row("fft_bench_json", 0.0,
-         f"written={os.path.abspath(path)};"
+         f"written={path};"
          f"stage_ratio_n4096={head['stage_ratio']:.2f};"
          f"r2c_over_c2c_n4096={head.get('r2c_over_c2c', float('nan')):.2f}")
 
@@ -489,11 +515,9 @@ def fft2():
         },
         "shapes": rows,
     }
-    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_fft2.json")
-    with open(path, "w") as f:
-        json.dump(out, f, indent=2)
+    path = _persist("fft2", out, device=dev.name)
     _row("fft2_bench_json", 0.0,
-         f"written={os.path.abspath(path)};"
+         f"written={path};"
          f"min_pass_reduction={out['criteria']['min_pass_reduction_pow2_2d']:.2f};"
          f"four_step_rel={four_step_rel:.2e}")
 
@@ -609,11 +633,9 @@ def fdas():
             "locked_mhz": locked,
         },
     }
-    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_fdas.json")
-    with open(path, "w") as f:
-        json.dump(out, f, indent=2)
+    path = _persist("fdas", out, device=dev.name)
     _row("fdas_bench_json", 0.0,
-         f"written={os.path.abspath(path)};"
+         f"written={path};"
          f"traffic_ratio={plan.traffic_ratio:.2f};"
          f"parity={rel:.2e};recovered={recovered}")
 
@@ -703,12 +725,9 @@ def tune():
             "mean_regret": regret,
         },
     }
-    path = os.path.join(os.path.dirname(__file__), "..",
-                        "BENCH_autotune.json")
-    with open(path, "w") as f:
-        json.dump(out, f, indent=2)
+    path = _persist("autotune", out, device=cache.device)
     _row("tune_bench_json", 0.0,
-         f"written={os.path.abspath(path)};"
+         f"written={path};"
          f"min_speedup={out['criteria']['min_speedup_vs_heuristic']:.3f};"
          f"replay_measurements="
          f"{out['criteria']['replay_measurements']}")
@@ -803,12 +822,9 @@ def pipeline():
             "rows_per_batch": sp.case.n_rows,
         },
     }
-    path = os.path.join(os.path.dirname(__file__), "..",
-                        "BENCH_pipeline.json")
-    with open(path, "w") as f:
-        json.dump(out, f, indent=2)
+    path = _persist("pipeline", out, device=dev.name)
     _row("pipeline_bench_json", 0.0,
-         f"written={os.path.abspath(path)};recovered={recovered_ok};"
+         f"written={path};recovered={recovered_ok};"
          f"false_positives={false_pos};realtime_margin={margin:.1f}")
     if not (recovered_ok and false_pos == 0 and realtime_ok):
         raise SystemExit(
@@ -930,8 +946,10 @@ def _run_chaos(n_requests, seed, *, wave=512, deadline_s=7e-6):
     """One open-loop chaos run; returns (service, submitted, stats)."""
     import hashlib
     from repro.core.hardware import TPU_V5E
+    from repro.power import FleetTelemetry
     from repro.runtime.faults import (FAIL_CLOCK_LOCK, FAIL_PLAN_BUILD,
-                                      KILL_DEVICE, STALL_WORKER, FaultPlan)
+                                      KILL_DEVICE, SENSOR_KINDS,
+                                      STALL_WORKER, FaultPlan)
     from repro.serving import SLO, FFTService, SLOPolicy, rung_name
 
     pool = _chaos_pool(seed)
@@ -941,8 +959,14 @@ def _run_chaos(n_requests, seed, *, wave=512, deadline_s=7e-6):
     plan = FaultPlan.generate(seed, n_batches=n_batches,
                               stall_duration_s=0.02)
     policy = SLOPolicy(default=SLO(deadline_s=deadline_s))
+    # The telemetry plane shares the fault plan: scheduled SENSOR_* events
+    # corrupt the per-batch power samples so the watchdog (not just the
+    # execution path) is exercised by the same deterministic schedule.
+    telemetry = FleetTelemetry.for_serving(TPU_V5E, seed=seed,
+                                           fault_plan=plan)
     svc = FFTService(TPU_V5E, keep_results=False, slo=policy,
-                     fault_plan=plan, drain_deadline_s=300.0)
+                     fault_plan=plan, drain_deadline_s=300.0,
+                     telemetry=telemetry)
     submitted = []
     t0 = time.perf_counter()
     for start in range(0, n_requests, wave):
@@ -1000,7 +1024,12 @@ def _run_chaos(n_requests, seed, *, wave=512, deadline_s=7e-6):
         "faults_fired": {k: plan.fired_count(k)
                          for k in (KILL_DEVICE, FAIL_CLOCK_LOCK,
                                    FAIL_PLAN_BUILD, STALL_WORKER)},
+        "sensor_faults_fired": {k: plan.fired_count(k)
+                                for k in SENSOR_KINDS},
         "faults_pending": plan.pending(),
+        "measured_energy_j": rep.measured_energy_j,
+        "modelled_energy_j": rep.energy_j,
+        "telemetry": rep.telemetry,
         "breaker_opens": rep.breaker_opens,
         "redistributions": rep.redistributions,
         "steals": rep.steals,
@@ -1083,11 +1112,10 @@ def chaos():
         "run": stats,
         "repro_runs": [sub_a, sub_b],
     }
-    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_chaos.json")
-    with open(path, "w") as f:
-        json.dump(out, f, indent=2)
+    from repro.core.hardware import TPU_V5E
+    path = _persist("chaos", out, device=TPU_V5E.name)
     _row("chaos_bench_json", 0.0,
-         f"written={os.path.abspath(path)};"
+         f"written={path};"
          f"availability={stats['availability']:.4f};"
          f"reproducible={reproducible}")
     if not (criteria["every_request_receipted"]
@@ -1096,12 +1124,200 @@ def chaos():
         raise SystemExit(f"chaos self-check failed: {criteria}")
 
 
+def _power_site(seed, *, fault_plan=None, site_cap_w=1400.0,
+                hard_cap_w=1500.0, n_devices=8):
+    """A governed 8-device TPU_V5E site with PR 5 sweep-optimum fallbacks."""
+    from repro.core import FFTCase, fft_workload
+    from repro.core.dvfs import sweep
+    from repro.core.hardware import TPU_V5E
+    from repro.power import SiteBudgetScheduler, SitePipeline
+
+    fallback = sweep(fft_workload(FFTCase(n=4096), TPU_V5E),
+                     TPU_V5E).optimal.f
+    pipes = [SitePipeline(name=f"pipe{i}", device_index=i,
+                          priority=(i % 4) + 1, fallback_mhz=fallback,
+                          u_core=0.9, u_mem=0.8)
+             for i in range(n_devices)]
+    return SiteBudgetScheduler(TPU_V5E, pipes, site_cap_w=site_cap_w,
+                               hard_cap_w=hard_cap_w, seed=seed,
+                               fault_plan=fault_plan)
+
+
+def power():
+    """Closed-loop power governance harness — persists BENCH_power.json.
+
+    Exercises the repro.power subsystem end to end on the simulated
+    8-device fleet:
+
+      converge     the governed site from a cold start: per-pipeline PI
+                   governors steer measured power onto the
+                   priority-weighted budget split
+      faults       one run per sensor-fault kind (dropout / spike /
+                   stale) injected as a 4-tick storm on device 0: the
+                   watchdog must go unhealthy and the governor must pin
+                   the static sweep-optimum fallback clock exactly
+      emergency    the site cap drops mid-run below current draw: the
+                   emergency rung floors clocks, sheds the
+                   lowest-priority pipeline and restores headroom
+      serving      a telemetered FFTService stream: receipts carry
+                   measured_energy_j next to the modelled energy_j
+
+    Self-checked acceptance (CI gates on a non-zero exit):
+      * the governed fleet's true site power NEVER exceeds the cap;
+      * the controller converges within REPRO_POWER_MAX_TICKS ticks;
+      * under EACH injected sensor-fault kind the governor engages the
+        bit-exact static-sweep fallback;
+      * two fresh runs produce the identical site digest.
+    """
+    from repro.core.hardware import TPU_V5E
+    from repro.power import FleetTelemetry
+    from repro.runtime.faults import SENSOR_KINDS, FaultEvent, FaultPlan
+
+    seed = int(os.environ.get("REPRO_POWER_SEED", "0"))
+    n_ticks = int(os.environ.get("REPRO_POWER_TICKS", "80"))
+    max_ticks = int(os.environ.get("REPRO_POWER_MAX_TICKS", "40"))
+    dt = 0.1
+
+    # --- phase A: cold-start convergence under the site cap ---------------
+    site = _power_site(seed)
+    ticks = site.run(n_ticks, dt=dt)
+    peak_w = max(t.truth_w for t in ticks)
+    converged_tick = site.first_converged_tick
+    digest_a = site.digest()
+    site_b = _power_site(seed)
+    site_b.run(n_ticks, dt=dt)
+    reproducible = digest_a == site_b.digest()
+    _row("power_converge", 0.0,
+         f"ticks={n_ticks};converged_tick={converged_tick};"
+         f"peak_w={peak_w:.1f};cap_w={site.site_cap_w:.0f};"
+         f"digest={digest_a[:16]};reproducible={reproducible}")
+
+    # --- phase B: static-sweep fallback under each sensor-fault kind ------
+    fallback_runs = {}
+    for kind in SENSOR_KINDS:
+        storm = FaultPlan(events=[FaultEvent(kind, batch_id=k, worker=0)
+                                  for k in range(10, 14)])
+        fsite = _power_site(seed, fault_plan=storm)
+        fticks = fsite.run(30, dt=dt)
+        gov = fsite.governors["pipe0"]
+        fb_ticks = [k for k, t in enumerate(fticks)
+                    if t.modes[0] == "fallback"]
+        exact = all(fticks[k].clocks_mhz[0] == gov.fallback_mhz
+                    for k in fb_ticks)
+        fallback_runs[kind] = {
+            "fired": storm.fired_count(kind),
+            "fallback_engagements": gov.fallback_engagements,
+            "fallback_ticks": fb_ticks,
+            "fallback_clock_exact": exact,
+            "fallback_mhz": gov.fallback_mhz,
+            "engaged": gov.fallback_engagements >= 1 and bool(fb_ticks),
+            "recovered": fticks[-1].health[0] == "healthy",
+        }
+        _row(f"power_fault_{kind.replace('sensor-', '')}", 0.0,
+             f"fired={storm.fired_count(kind)};"
+             f"fallback_ticks={len(fb_ticks)};exact={exact};"
+             f"recovered={fallback_runs[kind]['recovered']}")
+
+    # --- phase C: emergency rung on a mid-run hard-cap breach -------------
+    esite = _power_site(seed)
+    esite.run(20, dt=dt)
+    pre_active = len(esite.active)
+    esite.site_cap_w, esite.hard_cap_w = 850.0, 900.0
+    eticks = esite.run(20, dt=dt)[20:]
+    emergency_fired = esite.emergencies >= 1
+    shed_count = pre_active - len(esite.active)
+    cap_restored = eticks[-1].truth_w <= esite.hard_cap_w
+    _row("power_emergency", 0.0,
+         f"emergencies={esite.emergencies};shed={shed_count};"
+         f"final_w={eticks[-1].truth_w:.1f};hard_cap_w="
+         f"{esite.hard_cap_w:.0f};restored={cap_restored}")
+
+    # --- serving integration: measured J on receipts (informational) -----
+    from repro.serving import FFTService
+    rng = np.random.default_rng(seed)
+    tel = FleetTelemetry.for_serving(TPU_V5E, seed=seed)
+    svc = FFTService(TPU_V5E, keep_results=False, telemetry=tel)
+    for i in range(32):
+        n = (256, 512, 1024)[i % 3]
+        svc.submit((rng.standard_normal((2, n))
+                    + 1j * rng.standard_normal((2, n))
+                    ).astype(np.complex64))
+    svc.drain()
+    rep = svc.report()
+    _row("power_serving", 0.0,
+         f"measured_j={rep.measured_energy_j:.3e};"
+         f"modelled_j={rep.energy_j:.3e};"
+         f"reads={rep.telemetry['reads']}")
+
+    criteria = {
+        # Acceptance: the governed fleet never exceeds the site cap.
+        "peak_site_w": peak_w,
+        "site_cap_w": site.site_cap_w,
+        "cap_never_exceeded": peak_w <= site.site_cap_w,
+        # Acceptance: bounded-time convergence from a cold start.
+        "converged_tick": converged_tick,
+        "converged_in_bound": (converged_tick is not None
+                               and converged_tick <= max_ticks),
+        # Acceptance: the bit-exact static fallback engages under every
+        # injected sensor-fault kind.
+        "fallback_under_each_kind": all(
+            r["engaged"] and r["fallback_clock_exact"]
+            for r in fallback_runs.values()),
+        # Acceptance: the emergency rung both fires and works.
+        "emergency_engaged": emergency_fired,
+        "emergency_shed": shed_count,
+        "emergency_cap_restored": cap_restored,
+        # Acceptance: same seed => identical site digest, fresh runs.
+        "reproducible": reproducible,
+    }
+    out = {
+        "criteria": criteria,
+        "converge": {
+            "n_ticks": n_ticks,
+            "dt_s": dt,
+            "n_devices": 8,
+            "converged_tick": converged_tick,
+            "peak_site_w": peak_w,
+            "final_site_w": ticks[-1].truth_w,
+            "targets_w": dict(site.targets),
+            "final_clocks_mhz": list(ticks[-1].clocks_mhz),
+            "digest": digest_a,
+            "telemetry": site.telemetry.summary(),
+        },
+        "sensor_faults": fallback_runs,
+        "emergency": {
+            "emergencies": esite.emergencies,
+            "shed": shed_count,
+            "active_after": list(t for t in eticks[-1].active),
+            "final_site_w": eticks[-1].truth_w,
+            "hard_cap_w": esite.hard_cap_w,
+        },
+        "serving": {
+            "measured_energy_j": rep.measured_energy_j,
+            "modelled_energy_j": rep.energy_j,
+            "n_requests": rep.n_requests,
+        },
+    }
+    path = _persist("power", out, device=TPU_V5E.name)
+    _row("power_bench_json", 0.0,
+         f"written={path};cap_ok={criteria['cap_never_exceeded']};"
+         f"converged_tick={converged_tick};"
+         f"fallback_ok={criteria['fallback_under_each_kind']};"
+         f"reproducible={reproducible}")
+    if not (criteria["cap_never_exceeded"]
+            and criteria["converged_in_bound"]
+            and criteria["fallback_under_each_kind"]
+            and criteria["emergency_engaged"] and cap_restored
+            and reproducible):
+        raise SystemExit(f"power self-check failed: {criteria}")
+
+
 BENCHES = [fig4_exec_time, fig6_time_vs_freq, fig7_energy_u_shape,
            fig8_power_vs_freq, fig9_optimal_freq, table3_mean_optimal,
            fig10_gflops_per_watt, fig11_exec_increase, fig13_16_ief,
            table4_pipeline, kernels, fft, fft2, fdas, tune, pipeline,
            roofline, dvfs_cells, fft_pencil_roofline, conclusions_cost_co2,
-           serving, chaos]
+           serving, chaos, power]
 
 
 def main(argv: list[str] | None = None) -> None:

@@ -21,6 +21,29 @@ from repro.core.perf_model import WorkloadProfile
 from repro.core.power_model import PowerModel
 
 
+def guarded_ratio(num: float, den: float, *, on_zero: float = 1.0) -> float:
+    """``num / den`` with ONE documented zero-denominator convention.
+
+    Every ratio metric in this repo (availability, cache hit rate,
+    efficiency increase, measured-vs-modelled energy) hits the same edge:
+    an empty run divides by zero.  The convention, stated once here
+    instead of ad hoc at each call site:
+
+      * ``den == 0`` and ``num == 0``  ->  ``on_zero`` — the ratio of two
+        absent quantities is *defined by the metric*: 1.0 for "fraction
+        of demand served"-style metrics (no demand = nothing unserved),
+        0.0 for "fraction of events that hit"-style metrics (no events =
+        no hits), NaN when the caller wants absence to propagate;
+      * ``den == 0`` and ``num != 0``  ->  NaN, always — a nonzero
+        numerator over a zero denominator is a *contradiction* (work
+        accounted against no demand), and silently mapping it to
+        ``on_zero`` would hide the accounting bug.
+    """
+    if den == 0:
+        return on_zero if num == 0 else float("nan")
+    return num / den
+
+
 def fft_flops(n: int, n_batches: int = 1, n_fft: int = 1) -> float:
     """Eq. (5) numerator: 5 N log2(N) * N_b * N_FFT."""
     return 5.0 * n * np.log2(n) * n_batches * n_fft

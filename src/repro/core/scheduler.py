@@ -157,6 +157,12 @@ class ClockController:
         self._lock_count = 0
         self.events: collections.deque[ClockEvent] = collections.deque(
             maxlen=max_events)
+        # Sticky first sample: with a bounded log, the deque eventually
+        # drops the earliest events and a reconstructed trace would start
+        # mid-flight at an arbitrary clock.  The controller's defined
+        # initial state (t=0, boost clock) is kept outside the deque so
+        # trace() always starts from it.
+        self._first = ClockEvent(0.0, "init", self._f)
 
     @property
     def current_f(self) -> float:
@@ -183,9 +189,15 @@ class ClockController:
             self._record("reset", prev)
 
     def trace(self) -> tuple[np.ndarray, np.ndarray]:
-        """(t, f) step trace of every clock transition since start."""
-        ts = np.array([e.t for e in self.events])
-        fs = np.array([e.f for e in self.events])
+        """(t, f) step trace of the clock since controller start.
+
+        Always begins with the sticky first sample (t=0, boost clock) so
+        the trace starts from a defined state even after a bounded event
+        log (``max_events``) has dropped the oldest transitions.
+        """
+        events = [self._first, *self.events]
+        ts = np.array([e.t for e in events])
+        fs = np.array([e.f for e in events])
         return ts, fs
 
 

@@ -1,0 +1,41 @@
+"""Closed-loop power governance (live telemetry, not offline sweeps).
+
+The paper's DVFS savings (Secs. 4-5) come from *offline* frequency sweeps
+locked in at dispatch time; Barbosa et al. (2016) and astroCAMP argue
+SKA-scale operation needs *live* power monitoring with co-designed budget
+enforcement, because static operating points drift with temperature,
+contention and sensor failure.  This package closes the loop — and keeps
+it safe when its own sensors lie, stall or disappear:
+
+  sampler    PowerSampler NVML-style contract + a deterministic simulated
+             backend for CI (core.power_model + clock state + seeded
+             noise/drift), feeding bounded per-device telemetry rings
+  watchdog   TelemetryWatchdog: fresh/stale/dropout/spike classification
+             with a healthy/suspect/unhealthy per-device state machine
+  telemetry  FleetTelemetry: per-device sampler + ring + watchdog bundle
+  governor   PowerGovernor: guarded PI feedback over measured power with
+             hysteresis, anti-windup and slew-rate-limited clock moves;
+             on watchdog-unhealthy telemetry it falls back
+             bit-reproducibly to the cached static sweep optimum
+  site       SiteBudgetScheduler: fleet-level site power-cap enforcement
+             (priority-weighted budget allocation, clock trading,
+             lowest-priority-first shedding, an emergency clock-floor
+             rung on hard-cap breach)
+
+See docs/power.md for the control-loop diagram and the fallback contract.
+"""
+from repro.power.governor import GovernorConfig, PowerGovernor
+from repro.power.sampler import (PowerReading, PowerSampler,
+                                 SimulatedPowerSampler, TelemetryRing)
+from repro.power.site import SiteBudgetScheduler, SitePipeline, SiteTick
+from repro.power.telemetry import FleetTelemetry, TelemetryRead
+from repro.power.watchdog import (DROPOUT, FRESH, HEALTHY, SPIKE, STALE,
+                                  SUSPECT, UNHEALTHY, TelemetryWatchdog)
+
+__all__ = [
+    "DROPOUT", "FRESH", "FleetTelemetry", "GovernorConfig", "HEALTHY",
+    "PowerGovernor", "PowerReading", "PowerSampler", "SPIKE", "STALE",
+    "SUSPECT", "SimulatedPowerSampler", "SiteBudgetScheduler",
+    "SitePipeline", "SiteTick", "TelemetryRead", "TelemetryRing",
+    "TelemetryWatchdog", "UNHEALTHY",
+]

@@ -14,6 +14,13 @@ deterministic identifiers (batch ids, worker slots) —
                     service walks down the degradation ladder
   stall-worker      a worker wedges for ``duration`` seconds; its queued
                     work must be redistributed
+  sensor-dropout    a device's power-sensor read fails (NaN reading);
+                    the telemetry watchdog must classify it, and the
+                    power governor must never act on it
+  sensor-spike      the power sensor returns an impossible value (far
+                    outside the TDP envelope — a wedged I2C transaction)
+  sensor-stale      the power sensor keeps replaying an old reading with
+                    a frozen timestamp (the sampling daemon died)
 
 Because events are keyed on batch ids (assigned in deterministic FIFO
 order by ``FFTService.drain``) rather than wall-clock time, a chaos run
@@ -43,8 +50,16 @@ KILL_DEVICE = "kill-device"
 FAIL_CLOCK_LOCK = "fail-clock-lock"
 FAIL_PLAN_BUILD = "fail-plan-build"
 STALL_WORKER = "stall-worker"
+SENSOR_DROPOUT = "sensor-dropout"
+SENSOR_SPIKE = "sensor-spike"
+SENSOR_STALE = "sensor-stale"
 
-FAULT_KINDS = (KILL_DEVICE, FAIL_CLOCK_LOCK, FAIL_PLAN_BUILD, STALL_WORKER)
+FAULT_KINDS = (KILL_DEVICE, FAIL_CLOCK_LOCK, FAIL_PLAN_BUILD, STALL_WORKER,
+               SENSOR_DROPOUT, SENSOR_SPIKE, SENSOR_STALE)
+
+#: The telemetry-plane subset (consumed by repro.power samplers, not by
+#: the serving execution path).
+SENSOR_KINDS = (SENSOR_DROPOUT, SENSOR_SPIKE, SENSOR_STALE)
 
 
 class FaultError(SimulatedFailure):
@@ -161,34 +176,46 @@ class FaultPlan:
         plan_fail_rate: float = 0.005,
         stall_rate: float = 0.005,
         stall_duration_s: float = 0.02,
+        sensor_dropout_rate: float = 0.01,
+        sensor_spike_rate: float = 0.01,
+        sensor_stale_rate: float = 0.005,
         ensure_one_of_each: bool = True,
     ) -> "FaultPlan":
         """A seed-deterministic plan over ``n_batches`` batch ids.
 
         Each batch id draws each fault kind independently at its rate;
-        ``ensure_one_of_each`` additionally pins one kill, one clock-lock
-        failure and one stall onto the earliest batch ids so even tiny
-        runs satisfy the chaos harness's non-trivial-plan requirement.
+        ``ensure_one_of_each`` additionally pins one of each execution
+        fault (kill, clock-lock failure, stall) — and, when the run is
+        long enough, one of each telemetry sensor fault — onto the
+        earliest batch ids so even tiny runs satisfy the chaos harness's
+        non-trivial-plan requirement.
         """
         rng = np.random.default_rng(seed)
         events: list[FaultEvent] = []
+        pinned = 0
         if ensure_one_of_each and n_batches >= 3:
             events.append(FaultEvent(KILL_DEVICE, batch_id=0))
             events.append(FaultEvent(FAIL_CLOCK_LOCK, batch_id=1))
             events.append(FaultEvent(STALL_WORKER, batch_id=2,
                                      duration=stall_duration_s))
-        draws = rng.random((n_batches, 4))
-        for b in range(3 if ensure_one_of_each and n_batches >= 3 else 0,
-                       n_batches):
-            if draws[b, 0] < kill_rate:
-                events.append(FaultEvent(KILL_DEVICE, batch_id=b))
-            if draws[b, 1] < clock_fail_rate:
-                events.append(FaultEvent(FAIL_CLOCK_LOCK, batch_id=b))
-            if draws[b, 2] < plan_fail_rate:
-                events.append(FaultEvent(FAIL_PLAN_BUILD, batch_id=b))
-            if draws[b, 3] < stall_rate:
-                events.append(FaultEvent(STALL_WORKER, batch_id=b,
-                                         duration=stall_duration_s))
+            pinned = 3
+            if n_batches >= 6:
+                events.append(FaultEvent(SENSOR_DROPOUT, batch_id=3))
+                events.append(FaultEvent(SENSOR_SPIKE, batch_id=4))
+                events.append(FaultEvent(SENSOR_STALE, batch_id=5))
+                pinned = 6
+        rates = (kill_rate, clock_fail_rate, plan_fail_rate, stall_rate,
+                 sensor_dropout_rate, sensor_spike_rate, sensor_stale_rate)
+        kinds = (KILL_DEVICE, FAIL_CLOCK_LOCK, FAIL_PLAN_BUILD,
+                 STALL_WORKER, SENSOR_DROPOUT, SENSOR_SPIKE, SENSOR_STALE)
+        draws = rng.random((n_batches, len(kinds)))
+        for b in range(pinned, n_batches):
+            for col, (kind, rate) in enumerate(zip(kinds, rates)):
+                if draws[b, col] < rate:
+                    duration = stall_duration_s if kind == STALL_WORKER \
+                        else 0.0
+                    events.append(FaultEvent(kind, batch_id=b,
+                                             duration=duration))
         return cls(events=events, seed=seed)
 
 

@@ -40,8 +40,11 @@ class CacheStats:
 
     @property
     def hit_rate(self) -> float:
-        total = self.hits + self.misses
-        return self.hits / total if total else 0.0
+        """Hits / lookups; 0.0 for an untouched cache (no lookups = no
+        hits, the guarded_ratio "fraction of events" convention)."""
+        from repro.core.energy import guarded_ratio
+        return guarded_ratio(self.hits, self.hits + self.misses,
+                             on_zero=0.0)
 
 
 @dataclasses.dataclass

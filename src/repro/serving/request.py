@@ -218,6 +218,8 @@ class RequestReceipt:
     modelled_time_s: float      # model-predicted execution time of this share
     energy_j: float             # model-predicted energy of this share
     boost_energy_j: float       # same share executed at the boost clock
+    # --- telemetry (repro.power), None when the service runs unmetered ---
+    measured_energy_j: float | None = None   # watchdog-fresh telemetry share
     result: Any = None          # transform output (None if not retained)
     # --- pulsar-pipeline requests only -----------------------------------
     stages: list[StageReceipt] | None = None   # per-stage clock + J shares
@@ -260,5 +262,20 @@ class RequestReceipt:
 
     @property
     def i_ef_boost(self) -> float:
-        """Eq. 7 for this request (identical work => energy ratio)."""
-        return self.boost_energy_j / self.energy_j if self.energy_j else 1.0
+        """Eq. 7 for this request (identical work => energy ratio).
+
+        Shed requests did no work at either clock; by the
+        :func:`repro.core.energy.guarded_ratio` convention their
+        efficiency increase is 1.0 (nothing ran, nothing got worse).
+        """
+        from repro.core.energy import guarded_ratio
+        return guarded_ratio(self.boost_energy_j, self.energy_j, on_zero=1.0)
+
+    @property
+    def energy_error_frac(self) -> float | None:
+        """(measured - modelled) / modelled, None without fresh telemetry."""
+        from repro.core.energy import guarded_ratio
+        if self.measured_energy_j is None:
+            return None
+        return guarded_ratio(self.measured_energy_j - self.energy_j,
+                             self.energy_j, on_zero=0.0)

@@ -17,8 +17,13 @@ Request lifecycle (docs/serving.md walks through a full example):
 
 The energy numbers come from the repository's analytic model — the same
 model the benchmarks validate against the paper — because this container
-has no power sensor; on instrumented hardware the accounting hook is one
-power-trace integration (repro.core.energy.energy_from_trace).
+has no power sensor.  An optional ``telemetry`` bundle
+(repro.power.FleetTelemetry) adds a *measured* energy estimate next to
+the modelled one: each executed batch takes one watchdog-classified
+power sample, and receipts carry ``measured_energy_j`` priced at the
+measured power when the reading is fresh, at the model otherwise (the
+never-freewheel contract applied to accounting).  On instrumented
+hardware the same hook wraps NVML via a hardware PowerSampler.
 
 Robustness (repro.serving.slo + repro.runtime.faults): an optional
 ``slo`` policy turns drain() into admission-controlled serving — every
@@ -41,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.energy import guarded_ratio
 from repro.core.hardware import TPU_V5E, DeviceSpec
 from repro.core.power_model import PowerModel
 from repro.core.scheduler import ClockController
@@ -89,26 +95,35 @@ class ServiceReport:
     redistributions: int = 0       # batches pushed away from a sick worker
     breaker_opens: int = 0         # circuit-breaker quarantines
     slo: dict | None = None        # SLOPolicy.evaluate() scorecard
+    # --- power telemetry (repro.power), zero/None when unmetered ----------
+    measured_energy_j: float = 0.0  # watchdog-fresh measured J (model-filled
+    #                                 for non-fresh samples: never freewheels)
+    telemetry: dict | None = None   # FleetTelemetry.summary()
+
+    # Zero-denominator edges below follow the single documented
+    # convention of repro.core.energy.guarded_ratio.
 
     @property
     def availability(self) -> float:
         """Served / (served + fault-shed).  Admission sheds are excluded:
         refusing work the SLO says cannot be served on time is the
-        contract working, not the service failing."""
-        return self.n_requests / max(self.n_requests + self.fault_shed, 1)
+        contract working, not the service failing.  An empty report is
+        availability 1.0 (no demand, nothing unserved)."""
+        return guarded_ratio(self.n_requests,
+                             self.n_requests + self.fault_shed, on_zero=1.0)
 
     @property
     def joules_per_transform(self) -> float:
-        return self.energy_j / max(self.n_transforms, 1)
+        return guarded_ratio(self.energy_j, self.n_transforms, on_zero=0.0)
 
     @property
     def i_ef(self) -> float:
         """Service-level Eq. 7 (identical work => energy ratio)."""
-        return self.boost_energy_j / self.energy_j if self.energy_j else 1.0
+        return guarded_ratio(self.boost_energy_j, self.energy_j, on_zero=1.0)
 
     @property
     def throughput_tps(self) -> float:
-        return self.n_transforms / self.wall_s if self.wall_s else 0.0
+        return guarded_ratio(self.n_transforms, self.wall_s, on_zero=0.0)
 
 
 class FFTService:
@@ -145,6 +160,7 @@ class FFTService:
         breaker_cooldown_s: float = 0.05,
         drain_deadline_s: float | None = None,
         sleep_fn: Callable[[float], None] | None = None,
+        telemetry=None,
     ):
         self.device_spec = device_spec
         # Default batch budget: an eighth of device memory, capped at the
@@ -200,6 +216,11 @@ class FFTService:
         self._rung2_fns: dict[Any, Callable] = {}
         self.redistributions = 0
         self.stalls_honoured = 0
+        # --- power telemetry (repro.power.FleetTelemetry, optional) -------
+        # One watchdog-classified power sample per executed batch; receipts
+        # carry measured_energy_j next to the modelled energy_j.  None
+        # leaves the service unmetered (receipts report None).
+        self.telemetry = telemetry
 
     # ------------------------------------------------------------------ #
     # enqueue
@@ -536,6 +557,17 @@ class FFTService:
         per_time, per_energy = entry.per_transform(point)
         _, per_boost = entry.per_transform(entry.sweep.boost)
         retries = self._attempts.pop(batch.batch_id, 0)
+        # One telemetry sample per executed batch, at the clock it locked.
+        # Watchdog-fresh readings price the batch at measured power; any
+        # other label falls back to the modelled energy — receipts never
+        # carry a number derived from telemetry the watchdog distrusts.
+        measured_w = None
+        if self.telemetry is not None:
+            tr = self.telemetry.read(
+                worker, t_done, token=batch.batch_id, f_mhz=point.f,
+                u_core=entry.profile.core_utilisation(self.device_spec),
+                u_mem=entry.profile.mem_utilisation(self.device_spec))
+            measured_w = tr.measured_w
         offset = 0
         for req in batch.requests:
             rows = req.batch
@@ -560,6 +592,11 @@ class FFTService:
                 modelled_time_s=per_time * rows,
                 energy_j=per_energy * rows,
                 boost_energy_j=per_boost * rows,
+                measured_energy_j=(
+                    None if self.telemetry is None
+                    else (measured_w * per_time * rows
+                          if measured_w is not None
+                          else per_energy * rows)),
                 result=result,
                 stages=stages,
                 realtime_margin=entry.realtime_margin,
@@ -603,4 +640,7 @@ class FFTService:
             redistributions=self.redistributions,
             breaker_opens=sum(b.opens for b in self.breakers.values()),
             slo=self.slo.evaluate(receipts) if self.slo is not None else None,
+            measured_energy_j=sum(r.measured_energy_j or 0.0 for r in served),
+            telemetry=(self.telemetry.summary()
+                       if self.telemetry is not None else None),
         )
