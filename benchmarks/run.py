@@ -46,6 +46,12 @@ figure's headline quantity).
                         static-sweep fallback under injected sensor
                         faults, the emergency shed rung, telemetered
                         serving receipts -> persists BENCH_power.json
+  obs                   unified observability plane: tracing overhead
+                        gate (< 5% on a warm drain), ledger-audited
+                        fft2/fdas pass counts, bit-reproducible span +
+                        ledger digests across two runs, drift detection
+                        under a miscalibrated sensor model
+                        -> persists BENCH_obs.json
 
 Usage: ``python benchmarks/run.py [target ...]`` — no arguments runs all.
 """
@@ -486,17 +492,35 @@ def fft2():
              f"passes={row['passes_plan']}v{row['passes_chain']};"
              f"nodes={'+'.join(row['nodes'])}")
 
-    # Four-step headline: two fused passes + tight parity.
+    # Four-step headline: two fused passes + tight parity.  The pass
+    # count is no longer taken from the plan's own claim: an eager run
+    # inside a launch-ledger capture records the actual Pallas launches,
+    # and the criteria report what the ledger saw.
+    from repro.obs.ledger import LaunchLedger
     n4 = 2**14
     plan4 = plan_for_length(n4)
     x = (jax.random.normal(jax.random.PRNGKey(1), (2, n4)) +
          1j * jax.random.normal(jax.random.PRNGKey(2), (2, n4))
          ).astype(jnp.complex64)
-    got = np.asarray(plan4(x))
+    led4 = LaunchLedger()
+    with led4.capture():
+        got = np.asarray(plan4(x))
+    four_step_counts = led4.counts()
+    four_step_launches = sum(n for k, n in four_step_counts.items()
+                             if k.startswith("fft-"))
     want = np.fft.fft(np.asarray(x), axis=-1)
     four_step_rel = float(np.abs(got - want).max() / np.abs(want).max())
     _row("fft2_four_step", 0.0,
-         f"passes={plan4.passes};rel_err={four_step_rel:.2e}")
+         f"passes={four_step_launches};rel_err={four_step_rel:.2e};"
+         f"ledger={'+'.join(f'{k}:{v}' for k, v in four_step_counts.items())}")
+
+    # Ledger audit of the pow2 2-D claim on the smallest measured shape.
+    x64 = (jax.random.normal(jax.random.PRNGKey(3), (2, 64, 64))
+           ).astype(jnp.complex64)
+    led2 = LaunchLedger()
+    with led2.capture():
+        jax.block_until_ready(plan_nd((64, 64)).fn(x64))
+    pow2_2d_ledger = led2.counts().get("fft-c2c-t", 0)
 
     pow2_rows = [r for r in rows if all(
         d & (d - 1) == 0 for d in r["shape"])]
@@ -508,8 +532,15 @@ def fft2():
             "min_pass_reduction_pow2_2d": min(
                 r["pass_reduction"] for r in pow2_rows),
             "pow2_2d_passes": max(r["passes_plan"] for r in pow2_rows),
-            # Acceptance: four-step = 2 fused passes, 1e-4 parity.
-            "four_step_passes": plan4.passes,
+            # Ledger audit: launches actually recorded by an eager run of
+            # the 64x64 plan must equal the plan's claimed pass count.
+            "pow2_2d_passes_ledger": pow2_2d_ledger,
+            "pow2_2d_ledger_ok": pow2_2d_ledger == plan_nd((64, 64)).passes,
+            # Acceptance: four-step = 2 fused passes, 1e-4 parity.  The
+            # pass count is read from the launch ledger, not asserted.
+            "four_step_passes": four_step_launches,
+            "four_step_ledger_kernels": four_step_counts,
+            "four_step_ledger_ok": four_step_launches == plan4.passes,
             "four_step_rel_err": four_step_rel,
             "four_step_parity_1e4": four_step_rel < 1e-4,
         },
@@ -551,7 +582,20 @@ def fdas():
     rng = np.random.default_rng(0)
     spec = (rng.standard_normal((2, nbins))
             + 1j * rng.standard_normal((2, nbins))).astype(np.complex64)
-    got = np.asarray(matched_filter_plane(jnp.asarray(spec), bank))
+    # The eager plane run is captured by a launch ledger, so the pass
+    # claims below are audited against recorded Pallas launches rather
+    # than restated from the plan's own accounting.
+    from repro.obs.ledger import LaunchLedger
+    ledger = LaunchLedger()
+    with ledger.capture():
+        got = np.asarray(matched_filter_plane(jnp.asarray(spec), bank))
+    lcounts = ledger.counts()
+    inv_records = [r for r in ledger.records if r.kernel == "fft-c2c"]
+    # One batched inverse launch covers every (row, segment, template)
+    # plane; T falls out of its recorded shape.
+    inv_planes = (inv_records[0].shape[0]
+                  // (spec.shape[0] * plan.n_segments)
+                  if inv_records else 0)
     taps = bank.time_domain()
     m = 1 << (nbins + bank.taps - 2).bit_length()
     xs = np.fft.fft(spec, m, axis=-1)
@@ -604,9 +648,19 @@ def fdas():
         "taps": bank.taps,
         "criteria": {
             # Acceptance: fused epilogues — forward + T inverse passes,
-            # no standalone multiply pass.
+            # no standalone multiply pass.  Audited from the launch
+            # ledger: one fft-c2c-mul launch (fused forward + bank
+            # multiply), one batched inverse launch whose recorded shape
+            # covers the T template planes.
             "forward_passes": plan.forward_passes,
             "inverse_passes": plan.inverse_passes,
+            "forward_launches_ledger": lcounts.get("fft-c2c-mul", 0),
+            "inverse_launches_ledger": lcounts.get("fft-c2c", 0),
+            "inverse_planes_ledger": inv_planes,
+            "ledger_audit_ok": (
+                lcounts.get("fft-c2c-mul", 0) == plan.forward_passes
+                and lcounts.get("fft-c2c", 0) == 1
+                and inv_planes == plan.inverse_passes == t),
             "passes_per_template": plan.passes_per_template,
             "traffic_ratio_os_vs_direct": plan.traffic_ratio,
             # Acceptance: plane parity vs the direct oracle at 1e-4.
@@ -1312,12 +1366,201 @@ def power():
         raise SystemExit(f"power self-check failed: {criteria}")
 
 
+def obs():
+    """Observability plane — persists BENCH_obs.json.
+
+    Gates: (1) tracing overhead — a tracer-instrumented warm service
+    drain within 5% wall time of an uninstrumented one (min-of-repeats;
+    the ledger/metrics/drift plane is always on in both, so the delta
+    prices exactly the opt-in span machinery); (2) ledger-audited pass
+    claims — an eager pow2 2-D plan records exactly 2 fused launches and
+    the fused FDAS convolution records 1 forward + one batched inverse
+    launch covering all T template planes; (3) reproducibility — two
+    fresh fake-timer serving runs produce identical blake2b span digests
+    and identical ledger digests; (4) model-drift detection — the drift
+    detector alerts under a deliberately miscalibrated sensor truth
+    model and stays silent under the calibrated one.
+    """
+    import dataclasses as _dc
+
+    from repro.core.hardware import TPU_V5E
+    from repro.core.power_model import PowerModel
+    from repro.fft.convolve import conv_plan, overlap_save_conv
+    from repro.fft.plan_nd import plan_nd
+    from repro.obs import LaunchLedger, Tracer, launches_digest
+    from repro.obs import trace as trace_mod
+    from repro.power.telemetry import FleetTelemetry
+    from repro.serving import FFTService
+
+    class _FakeTimer:
+        """Deterministic clock: advances dt per call."""
+
+        def __init__(self, dt=1e-4):
+            self.t, self.dt = 0.0, dt
+
+        def __call__(self):
+            self.t += self.dt
+            return self.t
+
+    key = jax.random.PRNGKey(0)
+    payloads = []
+    for i in range(6):
+        kr, ki, key = jax.random.split(key, 3)
+        payloads.append((jax.random.normal(kr, (16, 2048))
+                         + 1j * jax.random.normal(ki, (16, 2048))
+                         ).astype(jnp.complex64))
+
+    # --- 1. tracing overhead on a warm drain -------------------------
+    def build(instrumented):
+        return FFTService(TPU_V5E, devices=[None, None],
+                          keep_results=False,
+                          tracer=Tracer() if instrumented else None)
+
+    def drive(svc):
+        for p in payloads:
+            svc.submit(p)
+        return svc.drain()
+
+    # Interleaved best-of-n: alternating the two services inside one
+    # repeat loop exposes both to the same machine-state drift, so the
+    # min-of-n delta prices the tracer, not the scheduler.
+    plain, traced = build(False), build(True)
+    for svc in (plain, traced):
+        for _ in range(2):
+            drive(svc)                                   # warm jit caches
+    plain_s, traced_s = [], []
+    for _ in range(9):
+        t0 = time.perf_counter()
+        drive(plain)
+        plain_s.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        drive(traced)
+        traced_s.append(time.perf_counter() - t0)
+    plain_us, traced_us = 1e6 * min(plain_s), 1e6 * min(traced_s)
+    overhead = traced_us / plain_us - 1.0
+    overhead_ok = overhead < 0.05
+    _row("obs_overhead", plain_us,
+         f"traced_us={traced_us:.1f};overhead={100*overhead:+.2f}%;"
+         f"ok={overhead_ok}")
+
+    # --- 2. ledger-audited pass claims --------------------------------
+    plan2 = plan_nd((64, 64))
+    led = LaunchLedger()
+    with led.capture():
+        jax.block_until_ready(plan2.fn(payloads[0].reshape(-1, 64, 64)))
+    fft2_counts = led.counts()
+    fft2_ok = (fft2_counts.get("fft-c2c-t", 0) == plan2.passes == 2
+               and len(fft2_counts) == 1)
+
+    n, taps, t, nfft = 1000, 17, 3, 256
+    cplan = conv_plan(n, taps, t, nfft)
+    led = LaunchLedger()
+    with led.capture():
+        jax.block_until_ready(overlap_save_conv(
+            payloads[1].reshape(-1)[:n], np.ones((t, taps), np.float32),
+            nfft=nfft))
+    fdas_counts = led.counts()
+    inv = [r for r in led.records if r.kernel == "fft-c2c"]
+    inv_planes = (inv[0].shape[0] // cplan.n_segments) if inv else 0
+    fdas_ok = (fdas_counts.get("fft-c2c-mul", 0) == cplan.forward_passes
+               and fdas_counts.get("fft-c2c", 0) == 1
+               and inv_planes == cplan.inverse_passes == t)
+    _row("obs_ledger_audit", 0.0,
+         f"fft2={'+'.join(f'{k}:{v}' for k, v in fft2_counts.items())};"
+         f"fdas_fwd={fdas_counts.get('fft-c2c-mul', 0)};"
+         f"fdas_inv_planes={inv_planes};ok={fft2_ok and fdas_ok}")
+
+    # --- 3/4. reproducible traces + drift detection -------------------
+    def traced_run(power_model=None):
+        timer = _FakeTimer()
+        tracer = Tracer(timer=timer)
+        svc = FFTService(
+            TPU_V5E, devices=[None, None], timer=timer, tracer=tracer,
+            keep_results=False,
+            telemetry=FleetTelemetry.for_serving(
+                TPU_V5E, seed=11, noise_frac=0.0,
+                power_model=power_model))
+        for p in payloads[:4]:
+            # one drain per submit: every batch is metered, so the drift
+            # detector clears its min_samples gate on one key
+            svc.submit(p)
+            svc.drain()
+        return svc, tracer
+
+    svc1, tr1 = traced_run()
+    svc2, tr2 = traced_run()
+    d1, d2 = trace_mod.digest(tr1.spans), trace_mod.digest(tr2.spans)
+    # Receipt-level launch digests: the second run serves warm jit
+    # executables (its own ledger records nothing live), so compare what
+    # the receipts carry, replayed from the process-wide signature store.
+    ld1 = launches_digest(r.launches for r in svc1.receipts)
+    ld2 = launches_digest(r.launches for r in svc2.receipts)
+    reproducible = d1 == d2 and ld1 == ld2
+    launches_backed = all(
+        r.launches and all(l.bytes_moved > 0 for l in r.launches)
+        for svc in (svc1, svc2) for r in svc.receipts)
+    _row("obs_trace_digest", 0.0,
+         f"span_digest={d1};ledger_digest={ld1};match={reproducible}")
+
+    hot = PowerModel(_dc.replace(TPU_V5E, name="hot-v5e",
+                                 tdp=2.0 * TPU_V5E.tdp))
+    svc_hot, _ = traced_run(power_model=hot)
+    drift_ok = (svc1.drift.drift_alerts == 0
+                and svc_hot.drift.drift_alerts >= 1)
+    _row("obs_drift", 0.0,
+         f"calibrated_alerts={svc1.drift.drift_alerts};"
+         f"miscalibrated_alerts={svc_hot.drift.drift_alerts};"
+         f"worst_err={svc_hot.drift.summary()['worst_ewma_error']:+.3f};"
+         f"ok={drift_ok}")
+
+    criteria = {
+        # Acceptance: < 5% wall-time overhead for full tracing.
+        "tracing_overhead_frac": overhead,
+        "tracing_overhead_lt_5pct": overhead_ok,
+        # Acceptance: ledger-audited pass counts match PR 3/4 claims.
+        "fft2_ledger_counts": fft2_counts,
+        "fft2_ledger_ok": fft2_ok,
+        "fdas_ledger_counts": fdas_counts,
+        "fdas_inverse_planes_ledger": inv_planes,
+        "fdas_ledger_ok": fdas_ok,
+        # Acceptance: identical digests across two fresh runs.
+        "span_digest_run1": d1,
+        "span_digest_run2": d2,
+        "ledger_digest_run1": ld1,
+        "ledger_digest_run2": ld2,
+        "digests_reproducible": reproducible,
+        "receipts_ledger_backed": launches_backed,
+        # Acceptance: drift alerts iff the model is miscalibrated.
+        "calibrated_drift_alerts": svc1.drift.drift_alerts,
+        "miscalibrated_drift_alerts": svc_hot.drift.drift_alerts,
+        "drift_detection_ok": drift_ok,
+    }
+    out = {
+        "criteria": criteria,
+        "overhead": {"plain_us": plain_us, "traced_us": traced_us,
+                     "requests_per_drain": len(payloads)},
+        "drift_miscalibrated": svc_hot.drift.summary(),
+        "metrics_series": sorted(
+            line.split("{")[0].split(" ")[0]
+            for line in svc1.metrics_text().splitlines()
+            if line and not line.startswith("#")),
+    }
+    path = _persist("obs", out, device=TPU_V5E.name)
+    _row("obs_bench_json", 0.0,
+         f"written={path};overhead_ok={overhead_ok};"
+         f"ledger_ok={fft2_ok and fdas_ok};reproducible={reproducible};"
+         f"drift_ok={drift_ok}")
+    if not (overhead_ok and fft2_ok and fdas_ok and reproducible
+            and launches_backed and drift_ok):
+        raise SystemExit(f"obs self-check failed: {criteria}")
+
+
 BENCHES = [fig4_exec_time, fig6_time_vs_freq, fig7_energy_u_shape,
            fig8_power_vs_freq, fig9_optimal_freq, table3_mean_optimal,
            fig10_gflops_per_watt, fig11_exec_increase, fig13_16_ief,
            table4_pipeline, kernels, fft, fft2, fdas, tune, pipeline,
            roofline, dvfs_cells, fft_pencil_roofline, conclusions_cost_co2,
-           serving, chaos, power]
+           serving, chaos, power, obs]
 
 
 def main(argv: list[str] | None = None) -> None:

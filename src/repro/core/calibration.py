@@ -121,5 +121,7 @@ def full_report() -> list[dict]:
 
 
 if __name__ == "__main__":
+    from repro.obs.log import get_logger
+    _log = get_logger("calibration")
     for r in full_report():
-        print(r)
+        _log.info("calibration-row", **{str(k): v for k, v in r.items()})

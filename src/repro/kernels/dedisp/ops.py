@@ -7,6 +7,7 @@ import numpy as np
 
 from repro.kernels.common import batch_tile, use_interpret
 from repro.kernels.dedisp.dedisp_kernel import dedisperse_pallas
+from repro.obs.ledger import record_launch
 
 
 def _as_static_delays(delays) -> tuple[tuple[int, ...], ...]:
@@ -66,4 +67,9 @@ def dedisperse_kernel(fb: jax.Array, delays, *,
     if pad:
         x = jnp.pad(x, ((0, pad), (0, 0), (0, 0)))
     out = dedisperse_pallas(x, static, tile_b=tile, interpret=interpret)[:b]
+    padded = b + pad
+    record_launch("dedisperse", grid=(padded // tile,),
+                  tile=(tile, nchan, n),
+                  bytes_moved=4 * padded * n * (nchan + len(static)),
+                  shape=(b, nchan, n))
     return out.reshape(*lead, len(static), n)

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 
 from repro.fft.radix import DEFAULT_RADICES
 from repro.kernels.common import batch_tile, use_interpret
+from repro.obs.ledger import record_launch
 from repro.kernels.fft.fft_kernel import (fft_axis1_pallas,
                                           fft_axis1_twiddle_pallas,
                                           fft_mul_pallas, fft_pallas,
@@ -81,6 +82,9 @@ def fft_kernel_c2c(x: jax.Array, *, inverse: bool = False,
     (re, im), tile = _tile_and_pad([re, im], b, n, tile_b=tile_b)
     out_re, out_im = fft_pallas(re, im, tile_b=tile, inverse=inverse,
                                 interpret=interpret, radices=radices)
+    padded = b + (-b) % tile
+    record_launch("fft-c2c", grid=(padded // tile,), tile=(tile, n),
+                  bytes_moved=16 * padded * n, shape=(b, n))
     if out_re.shape[0] != b:
         out_re, out_im = out_re[:b], out_im[:b]
     return (out_re + 1j * out_im).reshape(*lead, n)
@@ -123,6 +127,10 @@ def fft_kernel_c2c_mul(x: jax.Array, bank, *, inverse: bool = False,
     out_re, out_im = fft_mul_pallas(re, im, fbr, fbi, tile_b=tile,
                                     inverse=inverse, interpret=interpret,
                                     radices=radices)
+    padded = b + (-b) % tile
+    record_launch("fft-c2c-mul", grid=(padded // tile,), tile=(tile, n),
+                  bytes_moved=8 * n * (padded + t + padded * t),
+                  shape=(b, t, n))
     if out_re.shape[0] != b:
         out_re, out_im = out_re[:b], out_im[:b]
     return (out_re + 1j * out_im).reshape(*lead, t, n)
@@ -189,6 +197,9 @@ def fft_kernel_c2c_t(x: jax.Array, *, twiddle=None, inverse: bool = False,
     else:
         out_re, out_im = fft_t_pallas(re, im, tile_r=tile, inverse=inverse,
                                       interpret=interpret, radices=radices)
+    record_launch("fft-c2c-t", grid=(flat.shape[0], r // tile),
+                  tile=(tile, c), bytes_moved=16 * flat.shape[0] * r * c,
+                  shape=(flat.shape[0], r, c))
     return (out_re + 1j * out_im).reshape(*lead, c, r)
 
 
@@ -227,6 +238,9 @@ def fft_kernel_c2c_axis1(x: jax.Array, *, twiddle=None,
                                           inverse=inverse,
                                           interpret=interpret,
                                           radices=radices)
+    record_launch("fft-c2c-axis1", grid=(flat.shape[0], c // tile),
+                  tile=(r, tile), bytes_moved=16 * flat.shape[0] * r * c,
+                  shape=(flat.shape[0], r, c))
     return (out_re + 1j * out_im).reshape(*lead, r, c)
 
 
@@ -247,6 +261,10 @@ def fft_kernel_r2c_t(x: jax.Array, *, interpret: bool | None = None,
     tile = _row_tile(r, c, override=tile_b)
     out_re, out_im = rfft_t_pallas(flat, tile_r=tile, interpret=interpret,
                                    radices=radices)
+    record_launch(
+        "fft-r2c-t", grid=(flat.shape[0], r // tile), tile=(tile, c),
+        bytes_moved=4 * flat.shape[0] * r * (c + 2 * (c // 2 + 1)),
+        shape=(flat.shape[0], r, c))
     return (out_re + 1j * out_im).reshape(*lead, c // 2 + 1, r)
 
 
@@ -267,8 +285,16 @@ def transpose_kernel(x: jax.Array, *,
     if jnp.issubdtype(x.dtype, jnp.complexfloating):
         re, im = transpose_pallas(flat.real, flat.imag, tile_r=tr, tile_c=tc,
                                   interpret=interpret)
+        record_launch("transpose", grid=(flat.shape[0], r // tr, c // tc),
+                      tile=(tr, tc),
+                      bytes_moved=2 * flat.shape[0] * r * c * x.dtype.itemsize,
+                      shape=(flat.shape[0], r, c))
         return (re + 1j * im).astype(x.dtype).reshape(*lead, c, r)
     (out,) = transpose_pallas(flat, tile_r=tr, tile_c=tc, interpret=interpret)
+    record_launch("transpose", grid=(flat.shape[0], r // tr, c // tc),
+                  tile=(tr, tc),
+                  bytes_moved=2 * flat.shape[0] * r * c * x.dtype.itemsize,
+                  shape=(flat.shape[0], r, c))
     return out.reshape(*lead, c, r)
 
 
@@ -294,6 +320,10 @@ def fft_kernel_r2c(x: jax.Array, *, interpret: bool | None = None,
     (flat,), tile = _tile_and_pad([flat], b, n, tile_b=tile_b)
     out_re, out_im = rfft_pallas(flat, tile_b=tile, interpret=interpret,
                                  radices=radices)
+    padded = b + (-b) % tile
+    record_launch("fft-r2c", grid=(padded // tile,), tile=(tile, n),
+                  bytes_moved=4 * padded * (n + 2 * (n // 2 + 1)),
+                  shape=(b, n))
     if out_re.shape[0] != b:
         out_re, out_im = out_re[:b], out_im[:b]
     return (out_re + 1j * out_im).reshape(*lead, n // 2 + 1)
@@ -324,6 +354,10 @@ def fft_kernel_c2r(x: jax.Array, *, interpret: bool | None = None,
     (re, im), tile = _tile_and_pad([re, im], b, n, tile_b=tile_b)
     out = irfft_pallas(re, im, tile_b=tile, interpret=interpret,
                        radices=radices)
+    padded = b + (-b) % tile
+    record_launch("fft-c2r", grid=(padded // tile,), tile=(tile, n),
+                  bytes_moved=4 * padded * (2 * (m + 1) + n),
+                  shape=(b, n))
     if out.shape[0] != b:
         out = out[:b]
     return out.reshape(*lead, n)

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from repro.kernels.common import batch_tile, use_interpret
 from repro.kernels.harmonic_sum.harmonic_sum_kernel import (
     harmonic_sum_pallas, harmonic_sum_plane_pallas)
+from repro.obs.ledger import record_launch
 
 
 def _checked_power(power, n_harmonics: int, fn_name: str) -> jax.Array:
@@ -76,6 +77,11 @@ def harmonic_sum_kernel(power: jax.Array, n_harmonics: int = 32, *,
     p2, b, tile, lead = _tiled(power)
     out = harmonic_sum_pallas(p2, n_harmonics, tile_b=tile,
                               interpret=interpret)[:b]
+    n = power.shape[-1]
+    record_launch("harmonic-sum", grid=(p2.shape[0] // tile,),
+                  tile=(tile, n),
+                  bytes_moved=4 * p2.shape[0] * n * (1 + out.shape[-2]),
+                  shape=(b, n))
     return out.reshape(*lead, out.shape[-2], power.shape[-1])
 
 
@@ -96,4 +102,7 @@ def harmonic_sum_plane(power: jax.Array, n_harmonics: int = 8, *,
     stat, lev = harmonic_sum_plane_pallas(p2, n_harmonics, tile_b=tile,
                                           interpret=interpret)
     n = power.shape[-1]
+    record_launch("harmonic-sum-plane", grid=(p2.shape[0] // tile,),
+                  tile=(tile, n), bytes_moved=12 * p2.shape[0] * n,
+                  shape=(b, n))
     return stat[:b].reshape(*lead, n), lev[:b].reshape(*lead, n)

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 
 from repro.kernels.common import batch_tile, use_interpret
 from repro.kernels.spectrum.spectrum_kernel import power_spectrum_stats_pallas
+from repro.obs.ledger import record_launch
 
 
 def power_spectrum_stats_kernel(x: jax.Array, *,
@@ -32,6 +33,10 @@ def power_spectrum_stats_kernel(x: jax.Array, *,
         im = jnp.pad(im, ((0, pad), (0, 0)))
     p, mean, var = power_spectrum_stats_pallas(re, im, tile_b=tile,
                                                interpret=interpret)
+    record_launch("power-spectrum-stats", grid=(re.shape[0] // tile,),
+                  tile=(tile, n),
+                  bytes_moved=4 * re.shape[0] * (3 * n + 2),
+                  shape=(b, n))
     std = jnp.sqrt(jnp.maximum(var, 0.0))
     return (p[:b].reshape(*lead, n), mean[:b].reshape(lead),
             std[:b].reshape(lead))

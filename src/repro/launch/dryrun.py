@@ -33,6 +33,9 @@ from repro.configs import ARCHS, get_arch, get_shape, shapes_for
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import fix_tree, input_specs
 from repro.models.api import build_model
+from repro.obs.log import get_logger
+
+log = get_logger("dryrun")
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                             "artifacts", "dryrun")
@@ -246,11 +249,12 @@ def run_one(arch, shape_name, multi_pod, out_dir, opts=()):
         f.write(hlo_text)
     with open(path, "w") as f:
         json.dump(art, f, indent=1)
-    print(f"[dryrun] {tag}: args={art['memory']['argument_bytes']/1e9:.2f}GB "
-          f"fits={art['memory']['fits_16gb']} "
-          f"flops/dev={art['flops_per_device']:.3e} "
-          f"coll/dev={art['collective_bytes_per_device']:.3e} "
-          f"compile={art['compile_s']}s")
+    log.info("lowered", tag=tag,
+             args_gb=art["memory"]["argument_bytes"] / 1e9,
+             fits=art["memory"]["fits_16gb"],
+             flops_per_dev=art["flops_per_device"],
+             coll_per_dev=art["collective_bytes_per_device"],
+             compile_s=art["compile_s"])
     return path
 
 
@@ -265,7 +269,7 @@ def run_all(out_dir: str, multi_pod_only: bool = False):
     for arch, shp, mp in cells:
         tag = f"{arch}__{shp}__{'2x16x16' if mp else '16x16'}"
         if os.path.exists(os.path.join(out_dir, tag + ".json")):
-            print(f"[dryrun] {tag}: cached, skipping")
+            log.info("cached-skip", tag=tag)
             continue
         cmd = [sys.executable, "-m", "repro.launch.dryrun",
                "--arch", arch, "--shape", shp, "--out", out_dir]
@@ -274,8 +278,9 @@ def run_all(out_dir: str, multi_pod_only: bool = False):
         r = subprocess.run(cmd)
         if r.returncode != 0:
             failures.append(tag)
-            print(f"[dryrun] FAILED: {tag}")
-    print(f"[dryrun] done; {len(failures)} failures: {failures}")
+            log.error("cell-failed", tag=tag)
+    log.info("done", n_failures=len(failures),
+             failures=",".join(failures) or "-")
     return failures
 
 

@@ -1,0 +1,162 @@
+"""The kernel launch ledger: first-class accounting of Pallas launches.
+
+Every public kernel wrapper in ``repro.kernels.*.ops`` calls
+:func:`record_launch` once per successful ``pallas_call`` — with the
+kernel's name, grid, tile and an HBM bytes-moved estimate — replacing
+the test-only monkeypatch counters of earlier PRs with accounting the
+serving layer and benchmarks can read.
+
+Trace-time semantics: under ``jax.jit`` the wrapper bodies run while the
+function is *traced*, not on every execution, so a captured record means
+"this compiled executable launches this kernel (once per grid step) each
+time it runs".  The records captured while an executable first traces
+are therefore its launch **signature**; :meth:`LaunchLedger.capture`
+stores the first non-empty capture per key and
+:meth:`LaunchLedger.signature` replays it for every later request served
+by the same compiled artifact.  Benchmarks that want one record per
+*call* simply run the un-jitted function inside a capture.
+
+Recording is a no-op (one truthiness check) when no ledger is actively
+capturing, so instrumented kernels cost nothing on the hot path.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import hashlib
+import json
+from typing import Any, Iterable
+
+__all__ = ["LaunchRecord", "LaunchLedger", "record_launch",
+           "launches_digest"]
+
+
+def _ints(t) -> tuple[int, ...]:
+    if isinstance(t, int):
+        return (int(t),)
+    return tuple(int(v) for v in t)
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchRecord:
+    """One Pallas kernel launch (as recorded at trace time).
+
+    ``bytes_moved`` is the wrapper's HBM traffic estimate for the launch
+    (inputs read + outputs written, padded shapes) — the quantity the
+    paper's pass accounting is denominated in.
+    """
+
+    kernel: str                     # e.g. "fft-c2c-t"
+    grid: tuple[int, ...] = ()      # pallas grid (tiles launched)
+    tile: tuple[int, ...] = ()      # block shape per grid step
+    bytes_moved: int = 0            # HBM read+write estimate [bytes]
+    shape: tuple[int, ...] = ()     # logical (batch, ...) problem shape
+
+    def to_dict(self) -> dict:
+        return {"kernel": self.kernel, "grid": list(self.grid),
+                "tile": list(self.tile), "bytes_moved": self.bytes_moved,
+                "shape": list(self.shape)}
+
+
+#: Ledgers currently capturing (a stack; normally depth 0 or 1).
+_ACTIVE: list["LaunchLedger"] = []
+
+#: Process-wide launch signatures, keyed on capture key.  ``jax.jit``
+#: caches compiled executables globally, so a warm executable re-served
+#: through a *fresh* ledger records nothing at trace time; its signature
+#: is a property of the executable, not of any one ledger, and lives
+#: here so :meth:`LaunchLedger.signature` can replay it for every later
+#: consumer (first trace in the process wins).
+_SIGNATURES: dict[Any, tuple[LaunchRecord, ...]] = {}
+
+
+def record_launch(kernel: str, *, grid=(), tile=(), bytes_moved: int = 0,
+                  shape=()) -> None:
+    """Record one kernel launch into every actively-capturing ledger.
+
+    Called by the kernel wrappers after a successful pallas call (so
+    exception-driven fallback paths never record phantom launches).
+    A no-op when nothing is capturing.
+    """
+    if not _ACTIVE:
+        return
+    rec = LaunchRecord(kernel=kernel, grid=_ints(grid), tile=_ints(tile),
+                       bytes_moved=int(bytes_moved), shape=_ints(shape))
+    # dict.fromkeys: a ledger nested inside its own capture records once.
+    for ledger in dict.fromkeys(_ACTIVE):
+        ledger._record(rec)
+
+
+class LaunchLedger:
+    """An append-only launch log plus per-key launch signatures."""
+
+    def __init__(self) -> None:
+        self.records: list[LaunchRecord] = []
+
+    @contextlib.contextmanager
+    def capture(self, key: Any = None):
+        """Capture launches recorded in the body; yields this ledger.
+
+        With ``key`` set, the first capture *in the process* that records
+        anything becomes the key's launch signature (first-capture-wins:
+        under jit only the tracing call records, re-captures of the warm
+        executable see nothing, and the jit cache the signature describes
+        is itself process-wide).
+        """
+        mark = len(self.records)
+        _ACTIVE.append(self)
+        try:
+            yield self
+        finally:
+            _ACTIVE.remove(self)
+            if key is not None and len(self.records) > mark:
+                _SIGNATURES.setdefault(key, tuple(self.records[mark:]))
+
+    def _record(self, rec: LaunchRecord) -> None:
+        self.records.append(rec)
+
+    def signature(self, key: Any) -> list[LaunchRecord]:
+        """The launch signature captured for ``key`` ([] if never seen).
+
+        Reads the process-wide store, so an executable traced (and
+        recorded) under any earlier ledger keeps its signature when a
+        fresh service re-serves it from the warm jit cache.
+        """
+        return list(_SIGNATURES.get(key, ()))
+
+    def counts(self, records: Iterable[LaunchRecord] | None = None
+               ) -> dict[str, int]:
+        """Launches per kernel name over ``records`` (default: all)."""
+        out: dict[str, int] = {}
+        for r in (self.records if records is None else records):
+            out[r.kernel] = out.get(r.kernel, 0) + 1
+        return dict(sorted(out.items()))
+
+    def total_bytes(self) -> int:
+        return sum(r.bytes_moved for r in self.records)
+
+    def to_dicts(self) -> list[dict]:
+        return [r.to_dict() for r in self.records]
+
+    def digest(self) -> str:
+        """blake2b over the canonical JSON of every record (reproducible
+        across runs that record the same launches in the same order)."""
+        payload = json.dumps(self.to_dicts(), sort_keys=True,
+                             separators=(",", ":")).encode()
+        return hashlib.blake2b(payload, digest_size=16).hexdigest()
+
+
+def launches_digest(launch_lists: Iterable[Iterable[LaunchRecord]]) -> str:
+    """blake2b over per-receipt launch signatures, in receipt order.
+
+    The reproducibility gate for *served* launches: two runs whose
+    receipts carry the same launch signatures in the same order hash
+    identically, whether the records were captured live or replayed from
+    the process-wide signature store (a warm jit cache records nothing,
+    so :meth:`LaunchLedger.digest` alone cannot compare a cold run to a
+    warm one).
+    """
+    payload = json.dumps(
+        [[rec.to_dict() for rec in launches] for launches in launch_lists],
+        sort_keys=True, separators=(",", ":")).encode()
+    return hashlib.blake2b(payload, digest_size=16).hexdigest()

@@ -68,17 +68,24 @@ class FleetTelemetry:
     def for_serving(cls, device: DeviceSpec, *, seed: int = 0,
                     fault_plan=None, noise_frac: float = 0.01,
                     drift_w: float = 0.0,
-                    stale_timeout_s: float = 1e-6) -> "FleetTelemetry":
+                    stale_timeout_s: float = 1e-6,
+                    power_model=None) -> "FleetTelemetry":
         """A simulated-backend fleet bundle for the serving layer.
 
         Serving samples at batch-completion times on the simulated clock,
         where successive samples are microseconds apart — the default
         50 ms stale timeout would never classify a replayed reading as
         stale, so the serving preset tightens it to 1 us.
+
+        ``power_model`` overrides the sampler's truth model — pass a
+        deliberately miscalibrated one to exercise the serving drift
+        detector (repro.obs.drift) against a sensor whose physics
+        disagree with the accounting model.
         """
         sampler = SimulatedPowerSampler(device, seed=seed,
                                         noise_frac=noise_frac,
                                         drift_w=drift_w,
+                                        power_model=power_model,
                                         fault_plan=fault_plan)
         return cls(device, sampler, stale_timeout_s=stale_timeout_s)
 
@@ -120,6 +127,19 @@ class FleetTelemetry:
         """Governor-may-feedback verdict (devices never read are healthy)."""
         dog = self.watchdogs.get(device_index)
         return True if dog is None else dog.healthy
+
+    def fill_metrics(self, registry) -> None:
+        """Publish fleet telemetry counters into a MetricsRegistry."""
+        s = self.summary()
+        registry.gauge("repro_telemetry_reads",
+                       "power samples taken fleet-wide").set(s["reads"])
+        registry.gauge("repro_telemetry_unhealthy_entries",
+                       "device entries into the unhealthy state").set(
+                           s["unhealthy_entries"])
+        for label, n in sorted(s["labels"].items()):
+            registry.gauge(
+                f"repro_telemetry_label_{label.replace('-', '_')}",
+                f"samples the watchdog classified {label}").set(n)
 
     def summary(self) -> dict:
         """Aggregate label counts and health states across the fleet."""

@@ -84,6 +84,9 @@ class FaultTolerantDriver:
     ckpt_every: int = 10
     max_restarts: int = 3
     fail_at: dict[int, int] | None = None  # step -> host that "dies"
+    # Injectable monotonic clock (the serving layer's timer= idiom), so
+    # fault-path wall metrics are deterministic under a FakeTimer.
+    timer: Callable[[], float] = time.monotonic
 
     def run(self, n_steps: int, *, start_step: int = 0):
         """Run to n_steps, surviving injected failures via restore."""
@@ -97,10 +100,10 @@ class FaultTolerantDriver:
                     raise SimulatedFailure(
                         f"host {failed_host} lost at step {step}")
                 inputs, labels = self.data_iter_fn(step)
-                t0 = time.monotonic()
+                t0 = self.timer()
                 self.state, metrics = self.train_step(self.state, inputs,
                                                       labels)
-                metrics["wall"] = time.monotonic() - t0
+                metrics["wall"] = self.timer() - t0
                 metrics["step"] = step
                 metrics_log.append(metrics)
                 step += 1

@@ -62,8 +62,30 @@ FAULT_KINDS = (KILL_DEVICE, FAIL_CLOCK_LOCK, FAIL_PLAN_BUILD, STALL_WORKER,
 SENSOR_KINDS = (SENSOR_DROPOUT, SENSOR_SPIKE, SENSOR_STALE)
 
 
+def _notify_obs(exc: BaseException) -> None:
+    """Snapshot live flight recorders (repro.obs.trace) for ``exc``.
+
+    Imported lazily so the fault plane stays importable without the
+    observability package and never pays for it when no tracer exists.
+    """
+    try:
+        from repro.obs.trace import notify_fault
+    except ImportError:                      # pragma: no cover
+        return
+    notify_fault(exc)
+
+
 class FaultError(SimulatedFailure):
-    """Base class for injected serving faults (a SimulatedFailure kin)."""
+    """Base class for injected serving faults (a SimulatedFailure kin).
+
+    Constructing any subclass notifies the observability plane, so every
+    live tracer's flight recorder snapshots its last-N spans at the
+    moment of failure (the postmortem record).
+    """
+
+    def __init__(self, *args):
+        super().__init__(*args)
+        _notify_obs(self)
 
 
 class DeviceLostError(FaultError):
@@ -105,6 +127,7 @@ class DrainDeadlineError(RuntimeError):
         super().__init__(
             f"drain() exceeded its {deadline_s:g}s deadline with "
             f"{len(self.stuck)} batch(es) stuck; first stuck shape: {first}")
+        _notify_obs(self)
 
 
 @dataclasses.dataclass

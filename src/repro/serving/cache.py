@@ -46,6 +46,20 @@ class CacheStats:
         return guarded_ratio(self.hits, self.hits + self.misses,
                              on_zero=0.0)
 
+    def fill_metrics(self, registry) -> None:
+        """Publish the cache counters into a repro.obs MetricsRegistry."""
+        for field, help in (
+                ("hits", "plan+sweep cache hits"),
+                ("misses", "plan+sweep cache misses"),
+                ("plan_builds", "plans compiled"),
+                ("sweeps", "DVFS sweeps run"),
+                ("degraded_builds", "sweep-free boost-heuristic builds")):
+            registry.gauge(f"repro_cache_{field}", help).set(
+                getattr(self, field))
+        registry.gauge("repro_cache_hit_rate",
+                       "hits / lookups (0 when untouched)").set(
+                           self.hit_rate)
+
 
 @dataclasses.dataclass
 class CacheEntry:

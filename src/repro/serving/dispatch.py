@@ -41,6 +41,14 @@ class Dispatcher:
         """Remove and return every queued batch (failure recovery)."""
         return self.queue.clear()
 
+    def fill_metrics(self, registry) -> None:
+        """Publish dispatch counters into a repro.obs MetricsRegistry."""
+        registry.gauge("repro_dispatch_workers",
+                       "worker slots (devices)").set(
+                           self.queue.n_workers)
+        registry.gauge("repro_dispatch_steals",
+                       "batches stolen by idle workers").set(self.steals)
+
     def drain(
         self,
         execute: Callable[[Batch, int, Any], None],

@@ -229,6 +229,12 @@ class RequestReceipt:
     rung: int = 0               # degradation rung the batch executed at
     retries: int = 0            # executions lost to faults before success
     reason: str | None = None   # why degraded/shed (None: clean rung-0)
+    # --- kernel launch ledger (repro.obs.ledger) --------------------------
+    # The launch signature of the compiled executable that served this
+    # request's shape: one LaunchRecord per Pallas launch (kernel name,
+    # grid, tile, bytes-moved estimate), recorded when the executable
+    # first traced.  [] for shed requests and pure-JAX (rung 2) serves.
+    launches: list = dataclasses.field(default_factory=list)
 
     @classmethod
     def make_shed(cls, request: FFTRequest, reason: str,

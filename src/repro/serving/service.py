@@ -44,12 +44,14 @@ from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.energy import guarded_ratio
 from repro.core.hardware import TPU_V5E, DeviceSpec
 from repro.core.power_model import PowerModel
 from repro.core.scheduler import ClockController
+from repro.obs.drift import DriftDetector
+from repro.obs.ledger import LaunchLedger
+from repro.obs.metrics import MetricsRegistry, latency_summary
 from repro.runtime.faults import (FAIL_CLOCK_LOCK, FAIL_PLAN_BUILD,
                                   KILL_DEVICE, STALL_WORKER, CircuitBreaker,
                                   ClockLockError, DeviceLostError, FaultPlan,
@@ -99,6 +101,8 @@ class ServiceReport:
     measured_energy_j: float = 0.0  # watchdog-fresh measured J (model-filled
     #                                 for non-fresh samples: never freewheels)
     telemetry: dict | None = None   # FleetTelemetry.summary()
+    # --- observability (repro.obs), None when the service runs unmetered --
+    drift: dict | None = None       # DriftDetector.summary()
 
     # Zero-denominator edges below follow the single documented
     # convention of repro.core.energy.guarded_ratio.
@@ -161,6 +165,10 @@ class FFTService:
         drain_deadline_s: float | None = None,
         sleep_fn: Callable[[float], None] | None = None,
         telemetry=None,
+        tracer=None,
+        metrics: MetricsRegistry | None = None,
+        ledger: LaunchLedger | None = None,
+        drift: DriftDetector | None = None,
     ):
         self.device_spec = device_spec
         # Default batch budget: an eighth of device memory, capped at the
@@ -221,6 +229,16 @@ class FFTService:
         # carry measured_energy_j next to the modelled energy_j.  None
         # leaves the service unmetered (receipts report None).
         self.telemetry = telemetry
+        # --- observability (repro.obs) ------------------------------------
+        # The launch ledger is always on (recording costs one truthiness
+        # check per kernel at trace time); tracing is opt-in via tracer=
+        # (a repro.obs.Tracer — pass one sharing the service timer for
+        # reproducible traces).  The drift detector only accumulates when
+        # telemetry hands back watchdog-fresh power samples.
+        self.tracer = tracer
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.ledger = ledger if ledger is not None else LaunchLedger()
+        self.drift = drift if drift is not None else DriftDetector()
 
     # ------------------------------------------------------------------ #
     # enqueue
@@ -432,6 +450,12 @@ class FFTService:
             self._rung2_fns[key] = fn
         return fn
 
+    def _span(self, name: str, **attrs):
+        """A tracer span when tracing is on, else a free nullcontext."""
+        if self.tracer is None:
+            return contextlib.nullcontext()
+        return self.tracer.span(name, **attrs)
+
     def _execute(self, batch: Batch, worker: int, device: Any) -> None:
         """Fault-aware execution wrapper around :meth:`_execute_batch`.
 
@@ -520,27 +544,40 @@ class FFTService:
         t_start = self._timer()
         ctx = (self.clock.locked(lock_f) if lock_f is not None
                else contextlib.nullcontext())
-        with ctx:
-            # An injected device kill fires mid-batch: after the lock and
-            # dispatch decisions, before results exist.
-            if (self.faults is not None
-                    and self.faults.take(KILL_DEVICE, batch_id=batch.batch_id,
-                                         worker=worker)):
-                raise DeviceLostError(worker)
-            if (self.mesh is not None and batch.key.kind == KIND_FFT
-                    and x.shape[0] > 1 and rung < RUNG_PURE_JAX):
-                from repro.fft.distributed import batch_parallel_fft
-                y = batch_parallel_fft(x, self.mesh, fft_fn=entry.plan)
-            else:
-                if device is not None:
-                    x = jax.device_put(x, device)
-                if rung >= RUNG_PURE_JAX and batch.key.kind == KIND_FFT:
-                    from repro.fft.plan import pallas_disabled
-                    with pallas_disabled():
-                        y = self._rung2_fn(batch.key)(x)
-                else:
-                    y = entry.fn(x)
-            y = jax.block_until_ready(y)
+        # Span attributes (kind/shape/rung/clock) inherit to child spans;
+        # the ledger capture rides the execution so a first-trace records
+        # the shape's launch signature (repro.obs.ledger).
+        with self._span("batch", batch_id=batch.batch_id, worker=worker,
+                        kind=batch.key.kind,
+                        shape=batch.key.shape or (batch.key.n,),
+                        rung=rung, clock_mhz=point.f):
+            with ctx:
+                # An injected device kill fires mid-batch: after the lock
+                # and dispatch decisions, before results exist.
+                if (self.faults is not None
+                        and self.faults.take(KILL_DEVICE,
+                                             batch_id=batch.batch_id,
+                                             worker=worker)):
+                    raise DeviceLostError(worker)
+                with self._span("execute"), \
+                        self.ledger.capture(key=batch.key):
+                    if (self.mesh is not None
+                            and batch.key.kind == KIND_FFT
+                            and x.shape[0] > 1 and rung < RUNG_PURE_JAX):
+                        from repro.fft.distributed import batch_parallel_fft
+                        y = batch_parallel_fft(x, self.mesh,
+                                               fft_fn=entry.plan)
+                    else:
+                        if device is not None:
+                            x = jax.device_put(x, device)
+                        if (rung >= RUNG_PURE_JAX
+                                and batch.key.kind == KIND_FFT):
+                            from repro.fft.plan import pallas_disabled
+                            with pallas_disabled():
+                                y = self._rung2_fn(batch.key)(x)
+                        else:
+                            y = entry.fn(x)
+                    y = jax.block_until_ready(y)
         y = y[:rows]
         t_done = self._timer()
         self._account(batch, worker, entry, point, y, t_start, t_done,
@@ -551,6 +588,23 @@ class FFTService:
                 and len(self._receipts) >= self.max_retained_receipts):
             self._receipts.pop(next(iter(self._receipts)))  # oldest
         self._receipts[receipt.request.request_id] = receipt
+        # Terminal-receipt metrics: counters live beyond receipt retention.
+        if receipt.status == "served":
+            self.metrics.counter(
+                "repro_requests_served_total",
+                "requests served (any rung, incl. after retries)").inc()
+            self.metrics.histogram(
+                "repro_request_latency_seconds",
+                "end-to-end (queue + service) request latency").observe(
+                    receipt.latency)
+            if receipt.rung > RUNG_TUNED_DVFS:
+                self.metrics.counter(
+                    "repro_requests_degraded_total",
+                    "requests served below the tuned-DVFS rung").inc()
+        else:
+            self.metrics.counter(
+                "repro_requests_shed_total",
+                "requests terminated without execution").inc()
 
     def _account(self, batch, worker, entry, point, y, t_start, t_done,
                  rung=RUNG_TUNED_DVFS, reason=None):
@@ -568,6 +622,15 @@ class FFTService:
                 u_core=entry.profile.core_utilisation(self.device_spec),
                 u_mem=entry.profile.mem_utilisation(self.device_spec))
             measured_w = tr.measured_w
+        if measured_w is not None:
+            # Model-drift loop: one per-transform modelled-vs-measured
+            # observation per metered batch, keyed on (kind, shape,
+            # clock).  Fresh-only: suspect telemetry never moves EWMAs.
+            self.drift.observe(
+                (batch.key.kind, batch.key.shape or (batch.key.n,),
+                 point.f),
+                modelled=per_energy, measured=measured_w * per_time)
+        launches = self.ledger.signature(batch.key)
         offset = 0
         for req in batch.requests:
             rows = req.batch
@@ -603,6 +666,7 @@ class FFTService:
                 rung=rung,
                 retries=retries,
                 reason=reason,
+                launches=list(launches),
             ))
 
     # ------------------------------------------------------------------ #
@@ -615,7 +679,7 @@ class FFTService:
         shed = [r for r in receipts if r.status == "shed"]
         fault_shed = sum(1 for r in shed
                          if (r.reason or "").startswith("fault:"))
-        lat = np.array([r.latency for r in served]) if served else np.zeros(1)
+        lat = latency_summary(r.latency for r in served)
         # One wall-time contribution per batch (receipts in a batch share
         # the batch's service latency), over the *retained* window so every
         # report field covers the same receipts when retention is capped.
@@ -627,9 +691,9 @@ class FFTService:
             wall_s=sum(batch_wall.values()),
             energy_j=sum(r.energy_j for r in served),
             boost_energy_j=sum(r.boost_energy_j for r in served),
-            p50_latency_s=float(np.percentile(lat, 50)),
-            p99_latency_s=float(np.percentile(lat, 99)),
-            mean_latency_s=float(lat.mean()),
+            p50_latency_s=lat.p50,
+            p99_latency_s=lat.p99,
+            mean_latency_s=lat.mean,
             cache=self.cache.stats,
             steals=self.dispatcher.steals,
             clock_locks=self.clock.lock_count,
@@ -643,4 +707,53 @@ class FFTService:
             measured_energy_j=sum(r.measured_energy_j or 0.0 for r in served),
             telemetry=(self.telemetry.summary()
                        if self.telemetry is not None else None),
+            drift=(self.drift.summary()
+                   if self.drift.observations else None),
         )
+
+    def fill_metrics(self) -> MetricsRegistry:
+        """Refresh the registry from the current report and subsystem
+        counters; returns the registry (render with ``.render()``).
+
+        Terminal-receipt counters and the latency histogram accrue live
+        in :meth:`_store`; everything gauge-like — cache stats, steals,
+        breaker opens, telemetry labels, drift EWMAs, histogram-derived
+        p50/p99 — is refreshed here in one deterministic pass.
+        """
+        m = self.metrics
+        rep = self.report()
+        h = m.histogram("repro_request_latency_seconds",
+                        "end-to-end (queue + service) request latency")
+        m.gauge("repro_request_latency_p50_seconds",
+                "histogram-derived median latency").set(h.quantile(0.50))
+        m.gauge("repro_request_latency_p99_seconds",
+                "histogram-derived tail latency").set(h.quantile(0.99))
+        m.gauge("repro_availability",
+                "served / (served + fault-shed)").set(rep.availability)
+        m.gauge("repro_energy_joules",
+                "modelled energy at the locked clocks").set(rep.energy_j)
+        m.gauge("repro_measured_energy_joules",
+                "telemetry-priced energy (fresh samples)").set(
+                    rep.measured_energy_j)
+        m.gauge("repro_i_ef", "service-level Eq. 7 efficiency increase"
+                ).set(rep.i_ef)
+        m.gauge("repro_clock_locks", "DVFS clock locks taken").set(
+            rep.clock_locks)
+        m.gauge("repro_breaker_opens", "circuit-breaker quarantines").set(
+            rep.breaker_opens)
+        m.gauge("repro_redistributions",
+                "batches pushed away from sick workers").set(
+                    rep.redistributions)
+        m.gauge("repro_kernel_launches_recorded",
+                "ledger records captured (trace-time)").set(
+                    len(self.ledger.records))
+        self.cache.stats.fill_metrics(m)
+        self.dispatcher.fill_metrics(m)
+        if self.telemetry is not None:
+            self.telemetry.fill_metrics(m)
+        self.drift.fill_metrics(m)
+        return m
+
+    def metrics_text(self) -> str:
+        """One Prometheus-style exposition of the whole service."""
+        return self.fill_metrics().render()

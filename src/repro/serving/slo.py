@@ -26,9 +26,8 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
-
 from repro.core.hardware import DeviceSpec
+from repro.obs.metrics import latency_summary
 from repro.serving.request import KIND_FFT, FFTRequest, RequestReceipt
 
 # --------------------------------------------------------------------------
@@ -111,8 +110,7 @@ class SLOPolicy:
         out = {}
         for kind, rs in sorted(by_kind.items()):
             slo = self.for_kind(kind)
-            lat = np.array([r.latency for r in rs])
-            p99 = float(np.percentile(lat, 99))
+            p99 = latency_summary(r.latency for r in rs).p99
             transforms = sum(r.request.batch for r in rs)
             jpt = sum(r.energy_j for r in rs) / max(transforms, 1)
             out[kind] = {
