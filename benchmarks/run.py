@@ -92,20 +92,27 @@ def _timeit(fn, *args, n=5, warmup=2, reduce=None):
 
 #: Common envelope version for every persisted BENCH_*.json.  Bump when
 #: any emitter's layout changes shape (v2 added the shared
-#: schema_version/device stamp and the power target).
-BENCH_SCHEMA_VERSION = 2
+#: schema_version/device stamp and the power target; v3 the journal
+#: incarnation id).
+BENCH_SCHEMA_VERSION = 3
 
 
-def _persist(name, out, *, device):
+def _persist(name, out, *, device, incarnation=None):
     """Write ``BENCH_<name>.json`` with the common metadata stamp.
 
     Every persisted benchmark carries the same envelope — a
-    ``schema_version`` and the ``device`` whose DeviceSpec the modelled
-    numbers are for — so downstream tooling parses all of them the same
-    way.  Keys already present in ``out`` win over the stamp.
+    ``schema_version``, the ``device`` whose DeviceSpec the modelled
+    numbers are for, and the ``incarnation`` that produced the artifact
+    (the journal incarnation for journal-attached runs, the process
+    incarnation otherwise) — so downstream tooling parses all of them
+    the same way and can tell two generations of the same artifact
+    apart.  Keys already present in ``out`` win over the stamp.
     """
+    from repro.runtime.journal import process_incarnation
     out = {"schema_version": BENCH_SCHEMA_VERSION, "device": device,
-           "backend": jax.default_backend(), **out}
+           "backend": jax.default_backend(),
+           "incarnation": (incarnation if incarnation is not None
+                           else process_incarnation()), **out}
     path = os.path.join(os.path.dirname(__file__), "..",
                         f"BENCH_{name}.json")
     with open(path, "w") as f:
@@ -982,18 +989,29 @@ def _chaos_pool(seed):
     }
 
 
-def _chaos_submit(svc, i, pool):
-    """Submit request ``i`` of the deterministic mixed stream."""
+def _chaos_payload(i, pool):
+    """Payload + submit kwargs for request ``i`` of the mixed stream.
+
+    Pure function of (i, pool): the recovery harness re-resolves crashed
+    requests' payloads from their journaled ``payload_ref`` (= i) with
+    exactly this mapping.
+    """
     if i % 997 == 111:
-        return svc.submit(pool["pulsar"], kind="pulsar", dm_trials=4,
-                          templates=3, n_harmonics=4)
+        return pool["pulsar"], {"kind": "pulsar", "dm_trials": 4,
+                                "templates": 3, "n_harmonics": 4}
     if i % 211 == 23:
-        return svc.submit(pool["fdas"], kind="fdas", templates=3)
+        return pool["fdas"], {"kind": "fdas", "templates": 3}
     if i % 53 == 17:
-        return svc.submit(pool["fft2"], ndim=2)
+        return pool["fft2"], {"ndim": 2}
     if i % 7 == 3:
-        return svc.submit(pool["r2c"][1 + i % 2], transform="r2c")
-    return svc.submit(pool["fft"][((256, 512, 1024)[i % 3], 1 + i % 4)])
+        return pool["r2c"][1 + i % 2], {"transform": "r2c"}
+    return pool["fft"][((256, 512, 1024)[i % 3], 1 + i % 4)], {}
+
+
+def _chaos_submit(svc, i, pool, **extra):
+    """Submit request ``i`` of the deterministic mixed stream."""
+    x, kwargs = _chaos_payload(i, pool)
+    return svc.submit(x, **kwargs, **extra)
 
 
 def _run_chaos(n_requests, seed, *, wave=512, deadline_s=7e-6):
@@ -1176,6 +1194,326 @@ def chaos():
             and criteria["nontrivial_fault_plan"]
             and criteria["availability_ok"] and reproducible):
         raise SystemExit(f"chaos self-check failed: {criteria}")
+
+
+def _run_recovery(n_requests, seed, *, crashes=2, process="poisson",
+                  rate_hz=1e5, period_s=4e-2, deadline_s=6e-5,
+                  journal_dir=None, snapshot_every=1,
+                  segment_records=100_000):
+    """One crash-and-recover run over a seeded arrival process.
+
+    Drives the mixed chaos stream through a journal-attached service in
+    Poisson/Gamma arrival waves (the service drains once per
+    ``period_s`` of simulated arrival time, so wave sizes genuinely
+    vary), simulating ``crashes`` process kills at evenly spaced
+    admission ordinals via the fault plan's arrival seam.  Each crash
+    abandons the service mid-wave (journal tail un-fsynced, in-memory
+    state gone) and recovers from the journal: replayed receipts are
+    verified bit-identical against the outcomes already collected,
+    in-flight admits are re-enqueued, and the wave resumes.  Returns
+    (stats, journal_audit) with a submission-order outcome digest that
+    must not depend on the crash schedule.
+    """
+    import collections
+    import hashlib
+    import shutil
+    import tempfile
+
+    from repro.core.energy import guarded_ratio
+    from repro.core.hardware import TPU_V5E
+    from repro.data.arrivals import arrival_times, wave_slices
+    from repro.power import FleetTelemetry
+    from repro.runtime.faults import (CRASH_PROCESS, FAIL_CLOCK_LOCK,
+                                      FAIL_PLAN_BUILD, KILL_DEVICE,
+                                      KILL_HOST, SENSOR_KINDS, STALL_WORKER,
+                                      FaultPlan, HostTopology)
+    from repro.runtime.journal import RequestJournal, read_journal
+    from repro.serving import SLO, FFTService, SLOPolicy
+    from repro.serving.recovery import ReplayResult
+
+    pool = _chaos_pool(seed)
+    times = arrival_times(n_requests, seed=seed + 1, process=process,
+                          rate_hz=rate_hz)
+    waves = list(wave_slices(times, period_s))
+    n_workers = len(jax.devices())
+    # Host fault domains: group the fleet into ~4 simulated hosts.
+    topology = HostTopology(n_workers,
+                            devices_per_host=max(1, n_workers // 4))
+    n_batches = max(16 * (len(waves) + 1), 64)
+    crash_arrivals = tuple(sorted(
+        {n_requests * (k + 1) // (crashes + 1)
+         for k in range(crashes)})) if crashes else ()
+    # Two host kills pinned to batch ids the run will certainly reach
+    # (the 7-shape stream coalesces to >= ~6 batches per wave).
+    est_batches = max(6 * len(waves), 12)
+    host_kill_batches = (max(est_batches // 3, 2),
+                         max(2 * est_batches // 3, 5))
+
+    def make_plan():
+        # Identical seeded draws regardless of crash_arrivals (harness-
+        # only events append after the rng), so the crashed and uncrashed
+        # runs see the same serving faults.
+        return FaultPlan.generate(seed, n_batches=n_batches,
+                                  stall_duration_s=0.02,
+                                  crash_arrivals=crash_arrivals,
+                                  host_kill_batches=host_kill_batches)
+
+    def build(plan, *, recover_from=None):
+        kwargs = dict(
+            device_spec=TPU_V5E, keep_results=False,
+            slo=SLOPolicy(default=SLO(deadline_s=deadline_s)),
+            fault_plan=plan, drain_deadline_s=300.0,
+            telemetry=FleetTelemetry.for_serving(TPU_V5E, seed=seed,
+                                                 fault_plan=plan),
+            max_retained_receipts=16384, topology=topology)
+        if recover_from is not None:
+            return FFTService.recover(
+                recover_from,
+                payload_fn=lambda ref, meta: _chaos_payload(ref, pool)[0],
+                journal_kwargs={"segment_records": segment_records},
+                **kwargs)
+        journal = RequestJournal(journal_dir,
+                                 segment_records=segment_records)
+        return FFTService(journal=journal, **kwargs)
+
+    owns_dir = journal_dir is None
+    if owns_dir:
+        journal_dir = tempfile.mkdtemp(prefix="repro-journal-")
+
+    outcomes = {}
+    counters = collections.Counter()
+    fired = collections.Counter()
+    fault_kinds = (KILL_DEVICE, KILL_HOST, FAIL_CLOCK_LOCK,
+                   FAIL_PLAN_BUILD, STALL_WORKER, *SENSOR_KINDS)
+
+    def collect(receipts):
+        for r in receipts:
+            ref = r.request.payload_ref
+            if ref is None:
+                continue
+            t = (r.request.kind, r.outcome, r.rung, r.reason)
+            prev = outcomes.get(ref)
+            if prev is None:
+                outcomes[ref] = t
+                if r.recovered:
+                    counters["recovered_only"] += 1
+            elif r.recovered:
+                # A replayed receipt for an outcome the harness already
+                # saw live: the exactly-once contract says it must be
+                # bit-identical (status/reason/rung).
+                if prev == t:
+                    counters["replays_verified"] += 1
+                else:
+                    counters["replay_mismatches"] += 1
+            else:
+                counters["reexecuted_duplicates"] += 1
+
+    def absorb(svc, plan):
+        for k in fault_kinds:
+            fired[k] += plan.fired_count(k)
+        counters["host_kills"] += svc.host_kills
+        if svc.admission is not None:
+            counters["admitted"] += svc.admission.admitted
+            counters["degraded"] += svc.admission.degraded
+            counters["adm_shed"] += svc.admission.shed
+
+    plan = make_plan()
+    svc = build(plan)
+    crashes_done = 0
+    t0 = time.perf_counter()
+    for w, (start, stop) in enumerate(waves):
+        for i in range(start, stop):
+            if plan.take(CRASH_PROCESS, arrival=i) is not None:
+                # Simulated kill -9 mid-wave: the journal tail is
+                # abandoned without a durability barrier and every byte
+                # of in-memory service state dies with the process.
+                absorb(svc, plan)
+                svc.journal.crash()
+                crashes_done += 1
+                plan = make_plan()
+                svc = build(plan, recover_from=journal_dir)
+                plan.drop_consumed(batch_before=svc._next_batch_id,
+                                   arrival_before=i + 1)
+                collect(svc.recovered_receipts)
+                svc.recovered_receipts.clear()   # verified; free them
+            _chaos_submit(svc, i, pool, payload_ref=i)
+        collect(svc.drain())
+        if snapshot_every and (w + 1) % snapshot_every == 0:
+            svc.snapshot()
+    collect(svc.drain())
+    wall = time.perf_counter() - t0
+    absorb(svc, plan)
+    incarnation = svc.journal.incarnation
+    svc.journal.close()
+
+    # End-of-run audit straight off the durable log: every admit must
+    # have exactly one terminal record, no more, no less.  Streamed
+    # (retain=0 keeps counts, not payloads) so auditing a 10^6-request
+    # journal costs seq-set memory, not record memory.
+    audit = ReplayResult(retain=0)
+    _, jstats = read_journal(journal_dir, sink=audit.feed)
+
+    h = hashlib.blake2b(digest_size=16)
+    for i in range(n_requests):
+        t = outcomes.get(i)
+        h.update(f"{t[0]}:{t[1]}:{t[2]}:{t[3]}".encode()
+                 if t is not None else b"MISSING")
+    served = sum(1 for t in outcomes.values()
+                 if t[1] in ("served", "retried"))
+    fault_shed = sum(1 for t in outcomes.values() if t[1] == "shed"
+                     and str(t[3] or "").startswith("fault:"))
+    stats = {
+        "n_requests": n_requests,
+        "n_workers": n_workers,
+        "hosts": topology.n_hosts,
+        "seed": seed,
+        "process": process,
+        "rate_hz": rate_hz,
+        "period_s": period_s,
+        "waves": len(waves),
+        "mean_wave": n_requests / max(len(waves), 1),
+        "wall_s": wall,
+        "requests_per_s": n_requests / wall,
+        "crashes": crashes_done,
+        "crash_arrivals": list(crash_arrivals),
+        "incarnation": incarnation,
+        "lost_receipts": n_requests - len(outcomes),
+        "duplicate_receipts": (counters["reexecuted_duplicates"]
+                               + audit.duplicate_terminals),
+        "replays_verified": counters["replays_verified"],
+        "replay_mismatches": counters["replay_mismatches"],
+        "recovered_only": counters["recovered_only"],
+        "outcomes": {
+            "served": sum(1 for t in outcomes.values()
+                          if t[1] == "served"),
+            "retried": sum(1 for t in outcomes.values()
+                           if t[1] == "retried"),
+            "shed": sum(1 for t in outcomes.values() if t[1] == "shed"),
+        },
+        "availability": guarded_ratio(served, served + fault_shed,
+                                      on_zero=1.0),
+        "admission": {"admitted": counters["admitted"],
+                      "degraded": counters["degraded"],
+                      "shed": counters["adm_shed"]},
+        "faults_fired": {k: fired[k] for k in fault_kinds},
+        "host_kills": counters["host_kills"],
+        "journal": {
+            "segments": jstats.segments,
+            "records": jstats.records,
+            "invalid": jstats.invalid,
+            "admits": audit.admits_total,
+            "terminals": audit.terminals_total,
+            "open_admits": len(audit.open_admits),
+            "duplicate_terminals": audit.duplicate_terminals,
+            "incarnations": audit.incarnations,
+            "availability": audit.availability,
+            "duplicate_rate": audit.duplicate_rate,
+        },
+        "digest": h.hexdigest(),
+    }
+    if owns_dir:
+        shutil.rmtree(journal_dir, ignore_errors=True)
+    return stats
+
+
+def recovery():
+    """Crash-and-recover gate — persists BENCH_recovery.json.
+
+    Drives REPRO_RECOVERY_REQUESTS (default 10^6) mixed requests through
+    the journal-attached service in seeded Poisson arrival waves with
+    REPRO_CHAOS_CRASHES (default 2, >= 2 enforced) simulated process
+    kills mid-run, recovering from the write-ahead journal each time;
+    then repeats a smaller Gamma-arrival pair for the bursty process.
+    Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for
+    a simulated 8-device / 4-host fleet.
+
+    Self-checked acceptance (CI gates on a non-zero exit):
+      * zero lost receipts and zero duplicated receipts — the journal
+        audit proves exactly one terminal record per admit;
+      * every replayed receipt bit-identical (status/reason/rung) to the
+        live receipt the previous incarnation issued;
+      * availability >= 0.99 excluding admission sheds;
+      * the outcome digest is identical crashed-and-recovered vs
+        uncrashed at the same seed (for Poisson AND Gamma arrivals);
+      * >= 2 crashes and >= 1 host kill actually happened.
+    """
+    from repro.core.hardware import TPU_V5E
+    from repro.runtime.faults import KILL_HOST
+
+    n_requests = int(os.environ.get("REPRO_RECOVERY_REQUESTS", "1000000"))
+    crashes = max(int(os.environ.get("REPRO_CHAOS_CRASHES", "2")), 2)
+    seed = int(os.environ.get("REPRO_RECOVERY_SEED", "0"))
+    deadline_s = float(os.environ.get("REPRO_RECOVERY_DEADLINE_S", "6e-5"))
+
+    crashed = _run_recovery(n_requests, seed, crashes=crashes,
+                            deadline_s=deadline_s)
+    _row("recovery_stream",
+         crashed["wall_s"] / max(n_requests, 1) * 1e6,
+         f"rps={crashed['requests_per_s']:.0f};"
+         f"crashes={crashed['crashes']};"
+         f"lost={crashed['lost_receipts']};"
+         f"dup={crashed['duplicate_receipts']};"
+         f"replays_verified={crashed['replays_verified']};"
+         f"availability={crashed['availability']:.4f}")
+    uncrashed = _run_recovery(n_requests, seed, crashes=0,
+                              deadline_s=deadline_s)
+    digests_match = crashed["digest"] == uncrashed["digest"]
+    _row("recovery_digest", 0.0,
+         f"crashed={crashed['digest'][:16]};"
+         f"uncrashed={uncrashed['digest'][:16]};match={digests_match}")
+
+    # The bursty arrival process, smaller but with the same contract.
+    n_gamma = min(n_requests,
+                  int(os.environ.get("REPRO_RECOVERY_GAMMA_REQUESTS",
+                                     "20000")))
+    g_crashed = _run_recovery(n_gamma, seed, crashes=crashes,
+                              process="gamma", deadline_s=deadline_s)
+    g_uncrashed = _run_recovery(n_gamma, seed, crashes=0,
+                                process="gamma", deadline_s=deadline_s)
+    gamma_match = g_crashed["digest"] == g_uncrashed["digest"]
+    _row("recovery_gamma", 0.0,
+         f"n={n_gamma};crashes={g_crashed['crashes']};"
+         f"lost={g_crashed['lost_receipts']};"
+         f"dup={g_crashed['duplicate_receipts']};match={gamma_match}")
+
+    criteria = {
+        "crashes_injected": crashed["crashes"],
+        "crashes_ok": crashed["crashes"] >= 2,
+        "zero_lost": (crashed["lost_receipts"] == 0
+                      and g_crashed["lost_receipts"] == 0),
+        "zero_duplicated": (crashed["duplicate_receipts"] == 0
+                            and g_crashed["duplicate_receipts"] == 0),
+        "journal_exactly_once": (
+            crashed["journal"]["admits"] == n_requests
+            and crashed["journal"]["terminals"] == n_requests
+            and crashed["journal"]["open_admits"] == 0),
+        "replays_bit_identical": (crashed["replay_mismatches"] == 0
+                                  and g_crashed["replay_mismatches"] == 0),
+        "availability": crashed["availability"],
+        "availability_ok": crashed["availability"] >= 0.99,
+        "digest_crash_invariant": digests_match and gamma_match,
+        "host_kill_fired": crashed["faults_fired"][KILL_HOST] >= 1,
+    }
+    out = {
+        "criteria": criteria,
+        "crashed": crashed,
+        "uncrashed": uncrashed,
+        "gamma": {"crashed": g_crashed, "uncrashed": g_uncrashed},
+    }
+    path = _persist("recovery", out, device=TPU_V5E.name,
+                    incarnation=crashed["incarnation"])
+    _row("recovery_bench_json", 0.0,
+         f"written={path};zero_lost={criteria['zero_lost']};"
+         f"zero_dup={criteria['zero_duplicated']};"
+         f"digest_invariant={criteria['digest_crash_invariant']}")
+    if not (criteria["crashes_ok"] and criteria["zero_lost"]
+            and criteria["zero_duplicated"]
+            and criteria["journal_exactly_once"]
+            and criteria["replays_bit_identical"]
+            and criteria["availability_ok"]
+            and criteria["digest_crash_invariant"]
+            and criteria["host_kill_fired"]):
+        raise SystemExit(f"recovery self-check failed: {criteria}")
 
 
 def _power_site(seed, *, fault_plan=None, site_cap_w=1400.0,
@@ -1560,7 +1898,7 @@ BENCHES = [fig4_exec_time, fig6_time_vs_freq, fig7_energy_u_shape,
            fig10_gflops_per_watt, fig11_exec_increase, fig13_16_ief,
            table4_pipeline, kernels, fft, fft2, fdas, tune, pipeline,
            roofline, dvfs_cells, fft_pencil_roofline, conclusions_cost_co2,
-           serving, chaos, power, obs]
+           serving, chaos, recovery, power, obs]
 
 
 def main(argv: list[str] | None = None) -> None:

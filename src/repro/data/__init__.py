@@ -1,3 +1,5 @@
+from repro.data.arrivals import arrival_times, wave_slices
 from repro.data.synthetic import SyntheticTokens, synthetic_batches
 
-__all__ = ["SyntheticTokens", "synthetic_batches"]
+__all__ = ["SyntheticTokens", "arrival_times", "synthetic_batches",
+           "wave_slices"]

@@ -97,6 +97,15 @@ class TelemetryRing:
             raise ValueError(f"window size must be >= 0, got {k}")
         return list(self._buf)[-k:] if k else []
 
+    def clear(self) -> None:
+        """Drop every buffered reading (the host behind the device died).
+
+        ``pushed`` keeps counting lifetime samples, so ``dropped``
+        reflects the wipe — a host-kill leaves forensic evidence in the
+        counters even though the readings themselves are gone.
+        """
+        self._buf.clear()
+
     @property
     def dropped(self) -> int:
         return self.pushed - len(self._buf)

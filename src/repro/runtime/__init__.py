@@ -1,19 +1,27 @@
 from repro.runtime.checkpoint import CheckpointManager
 from repro.runtime.fault import (FaultTolerantDriver, SimulatedFailure,
                                  StragglerMonitor)
-from repro.runtime.faults import (FAIL_CLOCK_LOCK, FAIL_PLAN_BUILD,
-                                  KILL_DEVICE, STALL_WORKER, CircuitBreaker,
+from repro.runtime.faults import (CRASH_PROCESS, FAIL_CLOCK_LOCK,
+                                  FAIL_PLAN_BUILD, KILL_DEVICE, KILL_HOST,
+                                  STALL_WORKER, CircuitBreaker,
                                   ClockLockError, DeviceLostError,
                                   DrainDeadlineError, FaultError, FaultEvent,
-                                  FaultPlan, PlanBuildError, RetryPolicy,
-                                  WorkerStalledError)
+                                  FaultPlan, HostLostError, HostTopology,
+                                  PlanBuildError, ProcessCrashError,
+                                  RetryPolicy, WorkerStalledError)
 from repro.runtime.elastic import elastic_remesh_plan
+from repro.runtime.journal import (JournalRecord, ReplayStats,
+                                   RequestJournal, process_incarnation,
+                                   read_journal)
 from repro.runtime.workqueue import WorkStealingQueue
 
 __all__ = ["CheckpointManager", "CircuitBreaker", "ClockLockError",
-           "DeviceLostError", "DrainDeadlineError", "FAIL_CLOCK_LOCK",
-           "FAIL_PLAN_BUILD", "FaultError", "FaultEvent", "FaultPlan",
-           "FaultTolerantDriver", "KILL_DEVICE", "PlanBuildError",
-           "RetryPolicy", "STALL_WORKER", "SimulatedFailure",
-           "StragglerMonitor", "WorkerStalledError", "elastic_remesh_plan",
+           "CRASH_PROCESS", "DeviceLostError", "DrainDeadlineError",
+           "FAIL_CLOCK_LOCK", "FAIL_PLAN_BUILD", "FaultError", "FaultEvent",
+           "FaultPlan", "FaultTolerantDriver", "HostLostError",
+           "HostTopology", "JournalRecord", "KILL_DEVICE", "KILL_HOST",
+           "PlanBuildError", "ProcessCrashError", "ReplayStats",
+           "RequestJournal", "RetryPolicy", "STALL_WORKER",
+           "SimulatedFailure", "StragglerMonitor", "WorkerStalledError",
+           "elastic_remesh_plan", "process_incarnation", "read_journal",
            "WorkStealingQueue"]

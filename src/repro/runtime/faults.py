@@ -21,6 +21,13 @@ deterministic identifiers (batch ids, worker slots) —
                     outside the TDP envelope — a wedged I2C transaction)
   sensor-stale      the power sensor keeps replaying an old reading with
                     a frozen timestamp (the sampling daemon died)
+  kill-host         a whole simulated host (:class:`HostTopology` fault
+                    domain) dies: every co-hosted device, its breakers
+                    and its telemetry rings go down together
+  crash-process     the serving process itself dies; only the
+                    write-ahead journal (repro.runtime.journal) survives
+                    — recovery is ``FFTService.recover``'s job, not an
+                    in-process handler's
 
 Because events are keyed on batch ids (assigned in deterministic FIFO
 order by ``FFTService.drain``) rather than wall-clock time, a chaos run
@@ -53,9 +60,12 @@ STALL_WORKER = "stall-worker"
 SENSOR_DROPOUT = "sensor-dropout"
 SENSOR_SPIKE = "sensor-spike"
 SENSOR_STALE = "sensor-stale"
+KILL_HOST = "kill-host"          # a whole host (fault domain) dies
+CRASH_PROCESS = "crash-process"  # the serving process itself dies
 
 FAULT_KINDS = (KILL_DEVICE, FAIL_CLOCK_LOCK, FAIL_PLAN_BUILD, STALL_WORKER,
-               SENSOR_DROPOUT, SENSOR_SPIKE, SENSOR_STALE)
+               SENSOR_DROPOUT, SENSOR_SPIKE, SENSOR_STALE, KILL_HOST,
+               CRASH_PROCESS)
 
 #: The telemetry-plane subset (consumed by repro.power samplers, not by
 #: the serving execution path).
@@ -96,6 +106,77 @@ class DeviceLostError(FaultError):
         super().__init__(f"device behind worker {worker} lost{detail}")
 
 
+@dataclasses.dataclass(frozen=True)
+class HostTopology:
+    """Devices grouped into simulated hosts (the fault domains).
+
+    ``devices_per_host`` consecutive worker slots share one host: one
+    power feed, one PCIe/NIC complex, one telemetry daemon.  A host-level
+    fault (:class:`HostLostError`) therefore takes down every device in
+    the group together — their breakers trip as a unit and their
+    telemetry rings are wiped, exactly what a real node loss does.  The
+    default (1 device per host) makes every device its own fault domain,
+    which degenerates to the PR 7 per-device behaviour.
+    """
+
+    n_workers: int
+    devices_per_host: int = 1
+
+    def __post_init__(self):
+        if self.n_workers < 1 or self.devices_per_host < 1:
+            raise ValueError(
+                f"need n_workers >= 1 and devices_per_host >= 1, got "
+                f"{self.n_workers}/{self.devices_per_host}")
+
+    @property
+    def n_hosts(self) -> int:
+        return -(-self.n_workers // self.devices_per_host)
+
+    def host_of(self, worker: int) -> int:
+        if not 0 <= worker < self.n_workers:
+            raise ValueError(f"worker {worker} outside fleet of "
+                             f"{self.n_workers}")
+        return worker // self.devices_per_host
+
+    def workers_of(self, host: int) -> tuple[int, ...]:
+        if not 0 <= host < self.n_hosts:
+            raise ValueError(f"host {host} outside {self.n_hosts} hosts")
+        lo = host * self.devices_per_host
+        return tuple(range(lo, min(lo + self.devices_per_host,
+                                   self.n_workers)))
+
+
+class HostLostError(DeviceLostError):
+    """The whole host behind ``worker`` died (all its devices with it).
+
+    Subclasses :class:`DeviceLostError` — for the executing batch a host
+    loss *is* a device loss — but handlers that know the topology catch
+    it first and quarantine every co-hosted device together.
+    """
+
+    def __init__(self, worker: int, host: int, workers: tuple[int, ...]):
+        self.host = host
+        self.workers = tuple(workers)
+        super().__init__(worker,
+                         detail=f" with host {host} (workers "
+                                f"{list(self.workers)})")
+
+
+class ProcessCrashError(FaultError):
+    """The serving process itself dies (kill -9, OOM, power cut).
+
+    No in-process handler can catch a real one — the chaos harness
+    *simulates* it by abandoning the live service object mid-stream and
+    rebuilding from the write-ahead journal
+    (``FFTService.recover``, repro.serving.recovery).
+    """
+
+    def __init__(self, arrival: int | None = None):
+        self.arrival = arrival
+        super().__init__(
+            f"process crash injected at journal seq {arrival}")
+
+
 class ClockLockError(FaultError):
     """The DVFS clock-lock acquisition failed (NVML/driver error)."""
 
@@ -134,24 +215,32 @@ class DrainDeadlineError(RuntimeError):
 class FaultEvent:
     """One scheduled one-shot fault.
 
-    ``batch_id``/``worker`` are match constraints: a ``None`` field
-    matches anything.  ``duration`` only applies to stalls.
+    ``batch_id``/``worker``/``arrival`` are match constraints: a ``None``
+    field matches anything.  ``arrival`` keys on the *journal sequence
+    number* of a request (``FFTRequest.jseq``, assigned at admit by
+    repro.runtime.journal) — the seam that lets plans target a point in
+    the arrival stream rather than only the batch ids the FIFO
+    coalescer happens to assign.  ``duration`` only applies to stalls.
     """
 
     kind: str
     batch_id: int | None = None
     worker: int | None = None
     duration: float = 0.0
+    arrival: int | None = None
 
     def __post_init__(self):
         if self.kind not in FAULT_KINDS:
             raise ValueError(
                 f"unknown fault kind {self.kind!r}; have {FAULT_KINDS}")
 
-    def matches(self, batch_id: int | None, worker: int | None) -> bool:
+    def matches(self, batch_id: int | None, worker: int | None,
+                arrival: int | None = None) -> bool:
         if self.batch_id is not None and self.batch_id != batch_id:
             return False
         if self.worker is not None and self.worker != worker:
+            return False
+        if self.arrival is not None and self.arrival != arrival:
             return False
         return True
 
@@ -173,9 +262,10 @@ class FaultPlan:
         self.fired: list[FaultEvent] = []
 
     def take(self, kind: str, *, batch_id: int | None = None,
-             worker: int | None = None) -> FaultEvent | None:
+             worker: int | None = None,
+             arrival: int | None = None) -> FaultEvent | None:
         for i, ev in enumerate(self.events):
-            if ev.kind == kind and ev.matches(batch_id, worker):
+            if ev.kind == kind and ev.matches(batch_id, worker, arrival):
                 self.fired.append(self.events.pop(i))
                 return self.fired[-1]
         return None
@@ -187,6 +277,30 @@ class FaultPlan:
     def fired_count(self, kind: str | None = None) -> int:
         return sum(1 for ev in self.fired
                    if kind is None or ev.kind == kind)
+
+    def drop_consumed(self, *, batch_before: int | None = None,
+                      arrival_before: int | None = None) -> int:
+        """Discard events a *previous incarnation* already consumed.
+
+        After a process crash the recovering harness regenerates the same
+        seeded plan, then drops every event pinned to a batch id below
+        the journal-restored ``_next_batch_id`` (all earlier batches were
+        polled for every kind, so their pinned events fired before the
+        crash) or to an arrival seq already admitted.  Returns the number
+        dropped.  Dropped events are *not* added to ``fired`` — they
+        fired in another incarnation's plan object; callers that need
+        cross-incarnation fired totals sum per-incarnation counts.
+        """
+        def consumed(ev: FaultEvent) -> bool:
+            if (batch_before is not None and ev.batch_id is not None
+                    and ev.batch_id < batch_before):
+                return True
+            return (arrival_before is not None and ev.arrival is not None
+                    and ev.arrival < arrival_before)
+
+        before = len(self.events)
+        self.events = [ev for ev in self.events if not consumed(ev)]
+        return before - len(self.events)
 
     @classmethod
     def generate(
@@ -203,6 +317,8 @@ class FaultPlan:
         sensor_spike_rate: float = 0.01,
         sensor_stale_rate: float = 0.005,
         ensure_one_of_each: bool = True,
+        crash_arrivals: tuple = (),
+        host_kill_batches: tuple = (),
     ) -> "FaultPlan":
         """A seed-deterministic plan over ``n_batches`` batch ids.
 
@@ -212,6 +328,12 @@ class FaultPlan:
         long enough, one of each telemetry sensor fault — onto the
         earliest batch ids so even tiny runs satisfy the chaos harness's
         non-trivial-plan requirement.
+
+        ``crash_arrivals`` / ``host_kill_batches`` pin CRASH_PROCESS
+        events on journal arrival seqs and KILL_HOST events on batch ids.
+        Both are appended *after* the per-batch draws without consuming
+        the RNG stream, so the default (empty) plan is bit-identical to
+        what this function generated before the seams existed.
         """
         rng = np.random.default_rng(seed)
         events: list[FaultEvent] = []
@@ -239,6 +361,10 @@ class FaultPlan:
                         else 0.0
                     events.append(FaultEvent(kind, batch_id=b,
                                              duration=duration))
+        for a in crash_arrivals:
+            events.append(FaultEvent(CRASH_PROCESS, arrival=int(a)))
+        for b in host_kill_batches:
+            events.append(FaultEvent(KILL_HOST, batch_id=int(b)))
         return cls(events=events, seed=seed)
 
 
@@ -342,3 +468,18 @@ class CircuitBreaker:
         self.state = CLOSED
         self.failures = 0
         self.opened_at = None
+
+    def trip(self, now: float) -> None:
+        """Quarantine immediately, bypassing the failure count.
+
+        Host-level faults (:class:`HostLostError`) kill every device in
+        the fault domain at once; devices that were not even executing
+        have no failures to count, they are simply *gone* until the host
+        returns — modelled as an immediate open with the usual cooldown
+        playing the reboot time.  Idempotent while already open.
+        """
+        if self.state != OPEN:
+            self.state = OPEN
+            self.opens += 1
+        self.opened_at = now
+        self.failures = 0

@@ -8,10 +8,16 @@
              the graceful-degradation ladder (docs/robustness.md)
   service    FFTService: enqueue -> batch -> plan-cache -> clock-plan ->
              execute -> account (see docs/serving.md)
+  recovery   crash recovery from the write-ahead request journal:
+             snapshot/restore, journal replay, exactly-once receipts
+             (see docs/recovery.md)
 """
 from repro.serving.batcher import Batch, coalesce
 from repro.serving.cache import CacheEntry, CacheStats, PlanSweepCache
 from repro.serving.dispatch import Dispatcher
+from repro.serving.recovery import (RecoveredRequest, ReplayResult,
+                                    ServiceSnapshot, recover_service,
+                                    replay_journal)
 from repro.serving.request import (KIND_FDAS, KIND_FFT, KIND_PULSAR,
                                    FFTRequest, RequestReceipt, ShapeKey)
 from repro.serving.service import FFTService, ServiceReport
@@ -23,8 +29,9 @@ from repro.serving.slo import (RUNG_BOOST_HEURISTIC, RUNG_PURE_JAX,
 __all__ = [
     "AdmissionController", "AdmissionDecision", "Batch", "CacheEntry",
     "CacheStats", "Dispatcher", "FFTRequest", "FFTService", "KIND_FDAS",
-    "KIND_FFT", "KIND_PULSAR", "PlanSweepCache", "RequestReceipt",
-    "RUNG_BOOST_HEURISTIC", "RUNG_PURE_JAX", "RUNG_TUNED_DVFS",
-    "SLO", "SLOPolicy", "ServiceReport", "ShapeKey", "coalesce",
-    "max_rung_for_kind", "rung_name",
+    "KIND_FFT", "KIND_PULSAR", "PlanSweepCache", "RecoveredRequest",
+    "ReplayResult", "RequestReceipt", "RUNG_BOOST_HEURISTIC",
+    "RUNG_PURE_JAX", "RUNG_TUNED_DVFS", "SLO", "SLOPolicy",
+    "ServiceReport", "ServiceSnapshot", "ShapeKey", "coalesce",
+    "max_rung_for_kind", "recover_service", "replay_journal", "rung_name",
 ]

@@ -96,6 +96,13 @@ class FFTRequest:
     request_id: int = dataclasses.field(
         default_factory=lambda: next(_REQUEST_IDS))
     t_enqueue: float = 0.0               # stamped by the service
+    # Durable identity (repro.runtime.journal): request_id restarts with
+    # the process, jseq never does.  None on journal-less services.
+    jseq: int | None = None              # journal admit sequence number
+    # An opaque, JSON-safe token the *client* can resolve back to the
+    # payload (a stream index, an object-store key).  Journaled with the
+    # admit record so recovery can re-materialise in-flight payloads.
+    payload_ref: Any = None
 
     def __post_init__(self):
         if self.precision not in COMPLEX_BYTES:
@@ -235,6 +242,14 @@ class RequestReceipt:
     # grid, tile, bytes-moved estimate), recorded when the executable
     # first traced.  [] for shed requests and pure-JAX (rung 2) serves.
     launches: list = dataclasses.field(default_factory=list)
+    # --- crash consistency (repro.runtime.journal / serving.recovery) -----
+    # ``recovered`` marks a receipt replayed from the journal after a
+    # process crash (its status/reason/rung are bit-identical to the
+    # original; latencies and results are not re-measurable).
+    # ``incarnation`` is the journal incarnation that issued it ("" on
+    # journal-less services).
+    recovered: bool = False
+    incarnation: str = ""
 
     @classmethod
     def make_shed(cls, request: FFTRequest, reason: str,

@@ -44,6 +44,7 @@ from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.energy import guarded_ratio
 from repro.core.hardware import TPU_V5E, DeviceSpec
@@ -52,10 +53,12 @@ from repro.core.scheduler import ClockController
 from repro.obs.drift import DriftDetector
 from repro.obs.ledger import LaunchLedger
 from repro.obs.metrics import MetricsRegistry, latency_summary
+from repro.runtime import journal as wal
 from repro.runtime.faults import (FAIL_CLOCK_LOCK, FAIL_PLAN_BUILD,
-                                  KILL_DEVICE, STALL_WORKER, CircuitBreaker,
-                                  ClockLockError, DeviceLostError, FaultPlan,
-                                  PlanBuildError, RetryPolicy)
+                                  KILL_DEVICE, KILL_HOST, STALL_WORKER,
+                                  CircuitBreaker, ClockLockError,
+                                  DeviceLostError, FaultPlan, HostLostError,
+                                  HostTopology, PlanBuildError, RetryPolicy)
 from repro.serving.batcher import Batch, coalesce
 from repro.serving.cache import CacheStats, PlanSweepCache
 from repro.serving.dispatch import Dispatcher
@@ -169,6 +172,8 @@ class FFTService:
         metrics: MetricsRegistry | None = None,
         ledger: LaunchLedger | None = None,
         drift: DriftDetector | None = None,
+        journal=None,
+        topology: HostTopology | None = None,
     ):
         self.device_spec = device_spec
         # Default batch budget: an eighth of device memory, capped at the
@@ -239,6 +244,20 @@ class FFTService:
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.ledger = ledger if ledger is not None else LaunchLedger()
         self.drift = drift if drift is not None else DriftDetector()
+        # --- crash consistency (repro.runtime.journal, optional) ----------
+        # With a journal attached every admit/assign/terminal transition is
+        # logged write-ahead; the journal seq of the admit record is the
+        # request's durable identity (FFTRequest.jseq).  See
+        # repro.serving.recovery for the replay/re-enqueue half.
+        self.journal = journal
+        # Host fault domains: which workers share a simulated host (a
+        # KILL_HOST event takes the whole group down together).  None
+        # means every worker is its own host.
+        self.topology = topology
+        self._by_seq: dict[int, RequestReceipt] = {}
+        self.recovered_receipts: list[RequestReceipt] = []
+        self.replay = None              # ReplayResult set by recover()
+        self.host_kills = 0
 
     # ------------------------------------------------------------------ #
     # enqueue
@@ -257,6 +276,7 @@ class FFTService:
         templates: int = 16,
         segment: int = 0,
         dm_trials: int = 16,
+        payload_ref: Any = None,
     ) -> FFTRequest:
         """Enqueue one request (a (batch, *shape) or (*shape,) array).
 
@@ -283,11 +303,34 @@ class FFTService:
                          ndim=ndim, templates=templates, segment=segment,
                          dm_trials=dm_trials)
         req.t_enqueue = self._timer()
+        req.payload_ref = payload_ref
+        if self.journal is not None:
+            # Write-ahead: the admit record is durable (and its seq is the
+            # request's crash-stable identity) before the service takes
+            # the request.  ``payload_ref`` is the caller's token for
+            # re-resolving the payload after a crash — arrays themselves
+            # are not journaled.
+            from repro.serving.recovery import admit_record
+            req.jseq = self.journal.append(wal.ADMIT, admit_record(req))
         self._pending.append(req)
         return req
 
     def receipt(self, request: FFTRequest) -> RequestReceipt | None:
         return self._receipts.get(request.request_id)
+
+    def receipt_for_seq(self, jseq: int) -> RequestReceipt | None:
+        """The receipt for a journal admit seq (survives recovery, where
+        process-local request ids reset but journal seqs never do)."""
+        return self._by_seq.get(jseq)
+
+    def _remember_seq(self, jseq: int | None, receipt: RequestReceipt) -> None:
+        if jseq is None:
+            return
+        cap = self.max_retained_receipts
+        if (cap is not None and jseq not in self._by_seq
+                and len(self._by_seq) >= cap):
+            self._by_seq.pop(next(iter(self._by_seq)))      # oldest
+        self._by_seq[jseq] = receipt
 
     @property
     def receipts(self) -> list[RequestReceipt]:
@@ -344,6 +387,11 @@ class FFTService:
                         for i, r in enumerate(serve)
                     ]
                 self._next_batch_id += len(batches)
+                if self.journal is not None:
+                    for batch in batches:
+                        self.journal.append(wal.ASSIGN, {
+                            "batch_id": batch.batch_id,
+                            "rseqs": [r.jseq for r in batch.requests]})
                 for batch in batches:
                     self.dispatcher.submit(batch)
                 self.dispatcher.drain(self._execute, timer=self._timer,
@@ -360,20 +408,26 @@ class FFTService:
         return [self._receipts[r.request_id] for r in pending
                 if r.request_id in self._receipts]   # cap may have evicted
 
-    def _stack(self, batch: Batch) -> jax.Array:
+    def _stack(self, batch: Batch) -> np.ndarray:
+        # Stacking happens on the host: an eager device-side concatenate
+        # compiles one executable per distinct operand signature, and a
+        # streaming service sees a new per-request row split nearly every
+        # batch — host stacking costs one memcpy and compiles nothing.
+        # The executable itself still runs on-device (jit converts the
+        # host array at its one bucketed input shape).
         if batch.key.shape:
             # N-D payloads: normalise every request to (rows, *shape).
-            rows = [r.x.reshape((-1, *batch.key.shape))
+            rows = [np.asarray(r.x).reshape((-1, *batch.key.shape))
                     for r in batch.requests]
         else:
-            rows = [jnp.atleast_2d(r.x) for r in batch.requests]
-        x = jnp.concatenate(rows, axis=0) if len(rows) > 1 else rows[0]
+            rows = [np.atleast_2d(np.asarray(r.x)) for r in batch.requests]
+        x = np.concatenate(rows, axis=0) if len(rows) > 1 else rows[0]
         if batch.key.kind == KIND_FFT:
             if batch.key.transform == "r2c":
                 return x.real.astype(_REAL_EXEC_DTYPE[batch.key.precision])
             return x.astype(_EXEC_DTYPE[batch.key.precision])
         # The pulsar pipeline and the FDAS search consume real time series.
-        return x.real.astype(jnp.float32)
+        return x.real.astype(np.float32)
 
     def _effective_budget(self, batch: Batch) -> float | None:
         """Strictest real-time budget across the batch's requests.
@@ -407,13 +461,20 @@ class FFTService:
         br = self.breakers.get(worker)
         return br is not None and not br.would_allow(now)
 
-    def _reassign(self, batch: Batch, *, exclude: int, now: float) -> None:
-        """Push ``batch`` back onto the healthiest other worker's queue."""
+    def _reassign(self, batch: Batch, *, exclude, now: float) -> None:
+        """Push ``batch`` back onto the healthiest other worker's queue.
+
+        ``exclude`` is one worker index or an iterable of them (a host
+        fault domain).  When the exclusion covers every worker the batch
+        still has to land somewhere — it goes back to the excluded set
+        and waits out the breaker cooldowns there.
+        """
+        excluded = ({exclude} if isinstance(exclude, int) else set(exclude))
         others = [w for w in range(self.dispatcher.queue.n_workers)
-                  if w != exclude]
+                  if w not in excluded]
         healthy = [w for w in others if not self._peek_blocked(w, now)]
-        self.dispatcher.queue.push_least_loaded(batch,
-                                                allowed=healthy or others)
+        self.dispatcher.queue.push_least_loaded(
+            batch, allowed=healthy or others or sorted(excluded))
         self.redistributions += 1
 
     def _batch_rung(self, batch: Batch) -> tuple[int, list[str]]:
@@ -482,6 +543,32 @@ class FFTService:
                 return
         try:
             self._execute_batch(batch, worker, device)
+        except HostLostError as e:
+            # The whole fault domain died: every worker on the host is
+            # quarantined at once (breaker tripped straight to open — no
+            # point counting failures towards a threshold when the host
+            # is demonstrably gone) and its telemetry rings are wiped
+            # (the readings lived in that host's memory).  The batch then
+            # follows the normal retry/redistribute/shed ladder, with the
+            # whole domain excluded.
+            now = self._timer()
+            self.host_kills += 1
+            for w in e.workers:
+                self._breaker(w).trip(now)
+                if self.telemetry is not None:
+                    ring = self.telemetry.rings.get(w)
+                    if ring is not None:
+                        ring.clear()
+            attempts = self._attempts.get(batch.batch_id, 0) + 1
+            self._attempts[batch.batch_id] = attempts
+            if attempts > self.retry.max_retries:
+                self._attempts.pop(batch.batch_id, None)
+                for req in batch.requests:
+                    self._store(RequestReceipt.make_shed(
+                        req, "fault:host-lost", now))
+                return
+            self._sleep(self.retry.delay(attempts, token=batch.batch_id))
+            self._reassign(batch, exclude=e.workers, now=now)
         except DeviceLostError:
             now = self._timer()
             self._breaker(worker).record_failure(now)
@@ -522,9 +609,15 @@ class FFTService:
         if self.bucket_batches:
             # Shape bucketing: pad the row count to the next power of two so
             # streaming drains reuse a handful of compiled shapes instead of
-            # recompiling for every coalesced batch size.
-            from repro.fft.distributed import pad_rows
-            x = pad_rows(x, 1 << (rows - 1).bit_length())
+            # recompiling for every coalesced batch size.  Padding stays on
+            # the host for the same reason stacking does — an eager pad
+            # compiles once per *unbucketed* input shape, defeating the
+            # bucketing it implements.
+            target = 1 << (rows - 1).bit_length()
+            if target > rows:
+                x = np.concatenate(
+                    [x, np.zeros((target - rows, *x.shape[1:]),
+                                 dtype=x.dtype)], axis=0)
         # Rung 0 locks at the sweep optimum; degraded rungs still lock, at
         # boost, to pin against governor drift — clock control is
         # independent of which compute path runs, so a lock failure is
@@ -552,8 +645,18 @@ class FFTService:
                         shape=batch.key.shape or (batch.key.n,),
                         rung=rung, clock_mhz=point.f):
             with ctx:
-                # An injected device kill fires mid-batch: after the lock
-                # and dispatch decisions, before results exist.
+                # Injected kills fire mid-batch: after the lock and
+                # dispatch decisions, before results exist.  A host kill
+                # takes the worker's whole fault domain with it.
+                if (self.faults is not None
+                        and self.faults.take(KILL_HOST,
+                                             batch_id=batch.batch_id,
+                                             worker=worker)):
+                    topo = self.topology or HostTopology(
+                        self.dispatcher.queue.n_workers)
+                    host = topo.host_of(worker)
+                    raise HostLostError(worker, host,
+                                        topo.workers_of(host))
                 if (self.faults is not None
                         and self.faults.take(KILL_DEVICE,
                                              batch_id=batch.batch_id,
@@ -565,7 +668,7 @@ class FFTService:
                             and batch.key.kind == KIND_FFT
                             and x.shape[0] > 1 and rung < RUNG_PURE_JAX):
                         from repro.fft.distributed import batch_parallel_fft
-                        y = batch_parallel_fft(x, self.mesh,
+                        y = batch_parallel_fft(jnp.asarray(x), self.mesh,
                                                fft_fn=entry.plan)
                     else:
                         if device is not None:
@@ -583,7 +686,21 @@ class FFTService:
         self._account(batch, worker, entry, point, y, t_start, t_done,
                       rung=rung, reason="; ".join(reasons) or None)
 
-    def _store(self, receipt: RequestReceipt) -> None:
+    def _store(self, receipt: RequestReceipt, *, key=None) -> None:
+        jseq = getattr(receipt.request, "jseq", None)
+        if self.journal is not None and jseq is not None:
+            # Durability point: the terminal record hits the journal
+            # BEFORE the in-memory receipt exists, so a crash can lose an
+            # execution (at-least-once) but never a receipt — replay
+            # either finds the terminal record (receipt reconstructed
+            # bit-identically) or re-enqueues the admit (executed again,
+            # receipted once).  ``key`` (the batch's shape key) lets
+            # recovery replay the launch signature from the ledger.
+            from repro.serving.recovery import terminal_record
+            receipt.incarnation = self.journal.incarnation
+            rtype = wal.SERVED if receipt.status == "served" else wal.SHED
+            self.journal.append(rtype, terminal_record(receipt, key))
+            self._remember_seq(jseq, receipt)
         if (self.max_retained_receipts is not None
                 and len(self._receipts) >= self.max_retained_receipts):
             self._receipts.pop(next(iter(self._receipts)))  # oldest
@@ -667,7 +784,39 @@ class FFTService:
                 retries=retries,
                 reason=reason,
                 launches=list(launches),
-            ))
+            ), key=batch.key)
+
+    # ------------------------------------------------------------------ #
+    # crash consistency
+    # ------------------------------------------------------------------ #
+
+    def snapshot(self, *, governors: dict | None = None) -> str:
+        """Persist the durable service state to the attached journal.
+
+        Captures the plan/sweep cache keys, breaker and watchdog health,
+        drift EWMAs, metrics counters and the batch-id high-water mark
+        (plus any caller-managed power ``governors``) as an atomic
+        snapshot; recovery replays only the journal records written
+        after it.  Returns the snapshot path.
+        """
+        if self.journal is None:
+            raise ValueError("snapshot() requires a journal-attached "
+                             "service (pass journal= to the constructor)")
+        from repro.serving.recovery import ServiceSnapshot
+        return self.journal.write_snapshot(
+            ServiceSnapshot.capture(self, governors=governors))
+
+    @classmethod
+    def recover(cls, journal_dir: str, **kwargs) -> "FFTService":
+        """Rebuild a service from a journal directory after a crash.
+
+        See :func:`repro.serving.recovery.recover_service` — replayed
+        receipts land in ``recovered_receipts`` (and
+        ``receipt_for_seq``), in-flight admits are re-enqueued via
+        ``payload_fn``, and the replay accounting is on ``.replay``.
+        """
+        from repro.serving.recovery import recover_service
+        return recover_service(journal_dir, **kwargs)
 
     # ------------------------------------------------------------------ #
     # service-level reporting
